@@ -1,0 +1,58 @@
+"""Kernel microbenchmarks (interpret mode on CPU — wall numbers are NOT TPU
+performance; they exist to track relative regressions and exercise the
+dispatch path.  TPU performance is modeled analytically in §Roofline)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def main(fast: bool = False) -> List[str]:
+    rng = np.random.default_rng(0)
+    lines = []
+
+    b, h, s, hd = 1, 4, 512, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    us = _time(lambda q_, k_: ops.flash_attention(q_, k_, k_), q, k)
+    flops = 2 * 2 * b * h * s * s * hd / 2
+    lines.append(f"kernel_flash_attn_512,{us:.0f},interpret_GFLOP={flops/1e9:.2f}")
+
+    x = jnp.asarray(rng.normal(size=(1, 256, 8, 64)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(1, 256, 8)), jnp.float32)
+    a = -jnp.ones((8,), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(1, 256, 32)), jnp.float32)
+    us = _time(lambda *A: ops.ssd_scan(*A), x, dt, a, bb, bb)
+    lines.append(f"kernel_ssd_scan_256,{us:.0f},heads=8")
+
+    la = -jnp.asarray(rng.uniform(0.001, 0.3, size=(1, 256, 512)), jnp.float32)
+    bb2 = jnp.asarray(rng.normal(size=(1, 256, 512)), jnp.float32)
+    us = _time(lambda *A: ops.rg_lru_scan(*A), la, bb2)
+    lines.append(f"kernel_rg_lru_256x512,{us:.0f},")
+
+    st = jnp.asarray(rng.normal(size=(16, 1 << 18)), jnp.float32)
+    w = jnp.asarray(rng.dirichlet(np.ones(16)), jnp.float32)
+    us = _time(lambda *A: ops.weighted_average(*A), st, w)
+    mb = st.size * 4 / 1e6
+    lines.append(f"kernel_wavg_16x256k,{us:.0f},MB_touched={mb:.1f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for l in main():
+        print(l)

@@ -1,0 +1,52 @@
+"""§Roofline summary: collates experiments/dryrun/*.json into the
+per-(arch × shape × mesh) three-term table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+
+def load_records(out_dir: str = "experiments/dryrun") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def format_table(recs: List[dict]) -> List[str]:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':9s} "
+           f"{'t_comp(ms)':>10s} {'t_mem(ms)':>10s} {'t_coll(ms)':>10s} "
+           f"{'bound':>10s} {'M/H':>5s} {'mfu≤':>5s} {'fit':>4s}")
+    rows = [hdr]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem = r.get("memory_per_device") or {}
+        rows.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:9s} "
+            f"{r['t_compute_s']*1e3:10.2f} {r['t_memory_s']*1e3:10.2f} "
+            f"{r['t_collective_s']*1e3:10.2f} {r['bottleneck']:>10s} "
+            f"{r['model_flops_ratio']:5.2f} {r['mfu_bound']:5.2f} "
+            f"{'y' if mem.get('fits_16GiB') else 'n':>4s}")
+    return rows
+
+
+def main(fast: bool = False) -> List[str]:
+    recs = load_records()
+    if not recs:
+        return ["roofline_table,0,no_dryrun_records_yet"]
+    lines = []
+    for r in recs:
+        lines.append(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+            f"{r.get('t_compile_s', 0)*1e6:.0f},"
+            f"bound={r['bottleneck']};mfu_bound={r['mfu_bound']:.3f};"
+            f"fits={((r.get('memory_per_device') or {}).get('fits_16GiB'))}")
+    return lines
+
+
+if __name__ == "__main__":
+    for row in format_table(load_records()):
+        print(row)

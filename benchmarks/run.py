@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark:
+
+  paper_gait     — Fig. 2a/2b  (gait accuracy vs rounds / vs clients)
+  paper_cifar    — Fig. 2c/2d  (image accuracy vs rounds / vs clients)
+  comm_table     — §III-E      (communication-efficiency comparison)
+  ablations      — §VII future-work #1: selection/weighting/EMA ablations
+  kernels_bench  — kernel microbenches (interpret mode)
+  roofline_table — §Roofline   (collated dry-run terms, if present)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import ablations, comm_table, kernels_bench, paper_cifar, \
+    paper_gait, roofline_table
+
+BENCHES = {
+    "paper_gait": paper_gait.main,
+    "paper_cifar": paper_cifar.main,
+    "comm_table": comm_table.main,
+    "ablations": ablations.main,
+    "kernels_bench": kernels_bench.main,
+    "roofline_table": roofline_table.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced grids for CI")
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(BENCHES)
+    failed = []
+    print("name,us_per_call,derived")
+    for name in names:
+        try:
+            for line in BENCHES[name](fast=args.fast):
+                print(line)
+            sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Pytree checkpointing: flat .npz of leaves + a JSON treedef sidecar."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, metadata: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = dict(metadata or {})
+    meta["treedef"] = str(jax.tree.structure(tree))
+    meta["keys"] = sorted(flat)
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(meta, f, indent=2, default=str)
+
+
+def load_checkpoint(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = _flatten_with_paths(like)
+    if sorted(npz.files) != sorted(flat):
+        raise ValueError("checkpoint keys do not match target structure")
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    restored = []
+    for path_, leaf in leaves_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+        arr = npz[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        restored.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree.unflatten(jax.tree.structure(like), restored)

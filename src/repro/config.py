@@ -1,0 +1,407 @@
+"""Configuration system for the WSSL reproduction framework.
+
+Everything in the framework is driven by plain, serializable dataclasses:
+
+* :class:`ModelConfig`   — architecture definition (one per assigned arch).
+* :class:`WSSLConfig`    — the paper's algorithm knobs (clients, cut layer,
+                           selection rule, importance temperature, ...).
+* :class:`TrainConfig`   — optimizer / schedule / step counts.
+* :class:`MeshConfig`    — device mesh shape + axis names.
+* :class:`ShapeConfig`   — the assigned input shapes (train_4k, prefill_32k,
+                           decode_32k, long_500k).
+
+Architectures register themselves into a global registry on import of
+``repro.configs`` so launchers can do ``--arch qwen2.5-32b``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+# Sequence-mixer kinds.
+ATTN_GLOBAL = "global"      # full causal attention
+ATTN_LOCAL = "local"        # sliding-window causal attention
+MIX_RGLRU = "rglru"         # RG-LRU recurrent block (RecurrentGemma)
+MIX_SSM = "ssm"             # Mamba2 SSD block (attention-free)
+
+# Channel-mixer kinds.
+MLP_DENSE = "dense"
+MLP_MOE = "moe"
+MLP_NONE = "none"           # e.g. Mamba2 blocks have no separate MLP
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """Static description of one decoder layer."""
+
+    mixer: str = ATTN_GLOBAL          # one of the *mixer kinds* above
+    mlp: str = MLP_DENSE              # one of the MLP kinds above
+    window: Optional[int] = None      # sliding window size for ATTN_LOCAL
+
+    def signature(self) -> Tuple:
+        return (self.mixer, self.mlp, self.window)
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity -------------------------------------------------------------
+    name: str = "unnamed"
+    family: str = "dense"             # dense | moe | ssm | hybrid | vlm | audio
+    citation: str = ""
+
+    # core dims ------------------------------------------------------------
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+
+    # layer pattern --------------------------------------------------------
+    # the per-layer mixer pattern, tiled over num_layers.  e.g. gemma3 uses
+    # ("local",)*5 + ("global",); recurrentgemma ("rglru","rglru","local").
+    pattern: Tuple[str, ...] = (ATTN_GLOBAL,)
+    window: Optional[int] = None      # window for any "local" layers
+    # mlp pattern tiled likewise ("dense" | "moe" | "none")
+    mlp_pattern: Tuple[str, ...] = (MLP_DENSE,)
+
+    # attention ------------------------------------------------------------
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rope_kind: str = "standard"       # standard | mrope | none
+    rope_fraction: float = 1.0        # partial rotary (stablelm uses 0.25)
+    attn_logit_softcap: Optional[float] = None
+    query_scale: Optional[float] = None   # None -> 1/sqrt(head_dim)
+
+    # mlp ------------------------------------------------------------------
+    activation: str = "swiglu"        # swiglu | geglu | gelu
+    mlp_bias: bool = False
+
+    # moe ------------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # ssm (mamba2) ----------------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # rg-lru (recurrentgemma) ------------------------------------------------
+    lru_width: int = 0                # 0 -> d_model
+    lru_conv: int = 4
+
+    # norms / embeddings -----------------------------------------------------
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    embed_scale: bool = False         # gemma-style sqrt(d_model) input scale
+    final_logit_softcap: Optional[float] = None
+
+    # modality frontend -------------------------------------------------------
+    frontend: str = "none"            # none | audio | vision
+    frontend_tokens: int = 0          # #embedding positions supplied by stub
+
+    # long-context policy ------------------------------------------------------
+    # If set, the documented beyond-paper sliding-window variant used ONLY for
+    # the long_500k decode shape on otherwise full-attention architectures.
+    long_context_window: Optional[int] = None
+
+    # numerics -------------------------------------------------------------
+    dtype: str = "bfloat16"           # activation/compute dtype
+    param_dtype: str = "float32"      # parameter dtype
+
+    # ----------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+
+    # derived ----------------------------------------------------------------
+    @property
+    def period(self) -> int:
+        """Length of the repeating layer super-block."""
+        return _lcm(len(self.pattern), len(self.mlp_pattern))
+
+    def layer_specs(self) -> List[LayerSpec]:
+        specs = []
+        for i in range(self.num_layers):
+            mixer = self.pattern[i % len(self.pattern)]
+            mlp = self.mlp_pattern[i % len(self.mlp_pattern)]
+            win = self.window if mixer == ATTN_LOCAL else None
+            specs.append(LayerSpec(mixer=mixer, mlp=mlp, window=win))
+        return specs
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.d_model * self.ssm_expand
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(p in (ATTN_GLOBAL, ATTN_LOCAL) for p in self.pattern)
+
+    @property
+    def pure_full_attention(self) -> bool:
+        """True if every sequence mixer is full (global) attention."""
+        return all(p == ATTN_GLOBAL for p in self.pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6·N·D)."""
+        n = 0
+        emb = self.vocab_size * self.d_model
+        n += emb
+        if not self.tie_embeddings:
+            n += emb
+        hd = self.head_dim
+        for spec in self.layer_specs():
+            if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+                n += self.d_model * (self.num_heads * hd)          # q
+                n += 2 * self.d_model * (self.num_kv_heads * hd)   # k,v
+                n += (self.num_heads * hd) * self.d_model          # o
+                if self.qkv_bias:
+                    n += (self.num_heads + 2 * self.num_kv_heads) * hd
+            elif spec.mixer == MIX_RGLRU:
+                w = self.lru_width
+                n += 2 * self.d_model * w + w * self.d_model       # in x2 + out
+                n += self.lru_conv * w                             # conv
+                n += 2 * w * w + 3 * w                             # gates + Λ etc.
+            elif spec.mixer == MIX_SSM:
+                di, st, nh = self.d_inner, self.ssm_state, self.ssm_heads
+                n += self.d_model * (2 * di + 2 * st + nh)         # in_proj
+                n += self.ssm_conv * (di + 2 * st)                 # conv
+                n += di * self.d_model                             # out_proj
+                n += 2 * nh + di                                   # A, D, dt_bias-ish
+            if spec.mlp == MLP_DENSE:
+                mult = 3 if self.activation in ("swiglu", "geglu") else 2
+                n += mult * self.d_model * self.d_ff
+            elif spec.mlp == MLP_MOE:
+                mult = 3 if self.activation in ("swiglu", "geglu") else 2
+                n += self.num_experts * mult * self.d_model * self.d_ff
+                n += self.d_model * self.num_experts               # router
+            n += 2 * self.d_model                                  # 2 norms
+        n += self.d_model                                          # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Params active per token (MoE: only routed experts)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        mult = 3 if self.activation in ("swiglu", "geglu") else 2
+        per_expert = mult * self.d_model * self.d_ff
+        n_moe_layers = sum(1 for s in self.layer_specs() if s.mlp == MLP_MOE)
+        inactive = n_moe_layers * (self.num_experts - self.experts_per_token) * per_expert
+        return self.param_count() - inactive
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, default=str)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+    return a * b // math.gcd(a, b)
+
+
+# ---------------------------------------------------------------------------
+# WSSL / train / mesh / shape configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WSSLConfig:
+    """Knobs of the paper's algorithm (Algorithms 1 & 2)."""
+
+    num_clients: int = 4
+    # cut layer index: client stage = embedding + layers[:split_layer];
+    # server stage = layers[split_layer:] + final norm + head.
+    # None -> max(period, num_layers // 4) rounded to a super-block boundary.
+    split_layer: Optional[int] = None
+    # "fraction": select max(round(N * participation_fraction), 1) clients.
+    # "literal":  the paper's Algorithm 1 line 9 (degenerate: always 1).
+    selection_rule: str = "fraction"
+    participation_fraction: float = 0.5
+    importance_temp: float = 1.0      # softmax temperature over -val_loss
+    importance_ema: float = 0.5       # EMA decay ("stability of weights")
+    # aggregation weight source: "importance" (paper) or "uniform" (ablation)
+    aggregation: str = "importance"
+    seed: int = 0
+
+    def resolve_split(self, model: ModelConfig) -> int:
+        """Default cut: thin client (paper's edge devices hold a small
+        front-end) — at most 4 super-blocks and at most L/4 layers."""
+        if self.split_layer is not None:
+            return self.split_layer
+        period = _lcm(len(model.pattern), len(model.mlp_pattern))
+        quarter = (model.num_layers // 4) // period * period
+        cut = max(period, min(4 * period, quarter))
+        return min(cut, model.num_layers - period)
+
+    def num_selected(self, norm_weights=None) -> int:
+        if self.selection_rule == "literal":
+            # alpha' = max(alpha * mean(gamma), 1); mean(gamma) == 1/alpha.
+            return 1
+        return max(int(round(self.num_clients * self.participation_fraction)), 1)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    rounds: int = 20                  # WSSL communication rounds
+    steps_per_round: int = 10         # local batches per selected client/round
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 10
+    schedule: str = "cosine"          # cosine | linear | constant
+    optimizer: str = "adamw"          # adamw | sgd
+    remat: bool = True
+    # checkpoint every `remat_span` super-blocks (sqrt-style remat): the
+    # saved-activation stack shrinks by the span at the cost of one extra
+    # in-span recompute during backward.
+    remat_span: int = 4
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axes if a in ("pod", "data"))
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Architecture registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_arch(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_arch(name: str) -> ModelConfig:
+    _ensure_configs_imported()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> List[str]:
+    _ensure_configs_imported()
+    return sorted(_REGISTRY)
+
+
+def _ensure_configs_imported():
+    if not _REGISTRY:
+        import repro.configs  # noqa: F401  (registers everything)
+
+
+# ---------------------------------------------------------------------------
+# Reduced (smoke-test) variants
+# ---------------------------------------------------------------------------
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """A tiny same-family variant: ≤2 layers (one of each mixer kind in the
+    pattern), d_model ≤ 512, ≤4 experts — runnable on CPU in one step."""
+    # compress the pattern to its distinct mixer kinds (order preserved).
+    seen: List[str] = []
+    for p in cfg.pattern:
+        if p not in seen:
+            seen.append(p)
+    pattern = tuple(seen[:2]) or (ATTN_GLOBAL,)
+    mlp_seen: List[str] = []
+    for p in cfg.mlp_pattern:
+        if p not in mlp_seen:
+            mlp_seen.append(p)
+    mlp_pattern = tuple(mlp_seen[:2]) or (MLP_DENSE,)
+    num_layers = max(2, len(pattern), len(mlp_pattern))
+
+    d_model = min(cfg.d_model, 256)
+    n_heads = max(2, min(cfg.num_heads, 4))
+    kv = 1 if cfg.num_kv_heads == 1 else max(1, min(cfg.num_kv_heads, n_heads))
+    head_dim = max(16, d_model // n_heads)
+    return cfg.replace(
+        name=cfg.name + "-reduced",
+        num_layers=num_layers,
+        d_model=d_model,
+        num_heads=n_heads,
+        num_kv_heads=kv,
+        head_dim=head_dim,
+        d_ff=min(cfg.d_ff, 512) or cfg.d_ff,
+        vocab_size=min(cfg.vocab_size, 512),
+        pattern=pattern,
+        mlp_pattern=mlp_pattern,
+        window=min(cfg.window, 64) if cfg.window else None,
+        num_experts=min(cfg.num_experts, 4),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        # drop-free routing so decode == full forward exactly in smoke tests
+        moe_capacity_factor=4.0,
+        ssm_state=min(cfg.ssm_state, 32) if cfg.ssm_state else 0,
+        ssm_head_dim=32 if cfg.ssm_state else cfg.ssm_head_dim,
+        ssm_chunk=32,
+        lru_width=min(cfg.lru_width, d_model),
+        frontend_tokens=min(cfg.frontend_tokens, 16),
+        long_context_window=min(cfg.long_context_window, 64)
+        if cfg.long_context_window
+        else None,
+        dtype="float32",
+        param_dtype="float32",
+    )

@@ -1,0 +1,17 @@
+"""Architecture configs.  Importing this package registers every assigned
+architecture (plus the paper's own two models) into the registry."""
+
+from repro.configs import (  # noqa: F401
+    stablelm_12b,
+    musicgen_medium,
+    qwen2_5_32b,
+    olmoe_1b_7b,
+    gemma_2b,
+    phi3_5_moe,
+    recurrentgemma_2b,
+    mamba2_370m,
+    gemma3_12b,
+    qwen2_vl_72b,
+    wssl_paper,
+)
+from repro.config import get_arch, list_archs  # noqa: F401

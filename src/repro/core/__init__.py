@@ -1,0 +1,12 @@
+"""WSSL core: the paper's contribution.
+
+* wssl.py     — Algorithm 1 (importance, selection, weighted sampling) and
+                the Algorithm 2 weighted aggregation.
+* split.py    — the two-phase split fwd/bwd protocol (≡ end-to-end grad).
+* round.py    — one fused WSSL communication round for the transformer stack.
+* paper_loop.py — paper-scale WSSL trainer (gait FFN / ResNet-18).
+* protocol.py — communication accounting.
+* fairness.py — participation / accuracy fairness metrics.
+"""
+
+from repro.core import fairness, protocol, split, wssl  # noqa: F401

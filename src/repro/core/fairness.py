@@ -1,0 +1,46 @@
+"""Fairness metrics for WSSL's §VI claims.
+
+* participation entropy (normalized): 1.0 = perfectly even participation.
+* Jain's fairness index over participation counts or per-client accuracy.
+* per-client accuracy spread (max-min, std).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+
+def participation_entropy(counts: Sequence[float]) -> float:
+    c = np.asarray(counts, np.float64)
+    p = c / max(c.sum(), 1e-12)
+    p = p[p > 0]
+    h = -(p * np.log(p)).sum()
+    return float(h / np.log(max(len(c), 2)))
+
+
+def jain_index(values: Sequence[float]) -> float:
+    v = np.asarray(values, np.float64)
+    if np.allclose(v, 0):
+        return 1.0
+    return float(v.sum() ** 2 / (len(v) * (v ** 2).sum()))
+
+
+def accuracy_spread(per_client_acc: Sequence[float]) -> Dict[str, float]:
+    a = np.asarray(per_client_acc, np.float64)
+    return {
+        "min": float(a.min()),
+        "max": float(a.max()),
+        "spread": float(a.max() - a.min()),
+        "std": float(a.std()),
+        "jain": jain_index(a),
+    }
+
+
+def fairness_report(participation_counts: Sequence[float],
+                    per_client_acc: Sequence[float]) -> Dict[str, float]:
+    rep = {"participation_entropy": participation_entropy(participation_counts),
+           "participation_jain": jain_index(participation_counts)}
+    rep.update({f"acc_{k}": v for k, v in accuracy_spread(per_client_acc).items()})
+    return rep

@@ -1,0 +1,81 @@
+"""Communication accounting: the paper's §III-E efficiency claim, made
+quantitative for both the paper's WAN view and the TPU-mesh view.
+
+For a round with S selected clients, batch b, seq s, cut width d, dtype
+bytes e:
+
+  split learning:  up = S·b·s·d·e (activations), down = same (gradients),
+                   sync = client-stage params broadcast (if syncing)
+  federated (for comparison): 2 · S · |client params| per round
+  centralized:      one-off raw-data upload (the privacy non-starter)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.asarray(l).size * np.asarray(l).dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
+@dataclass
+class RoundComm:
+    round_index: int
+    selected: int
+    bytes_up: int
+    bytes_down: int
+    bytes_sync: int
+
+    @property
+    def total(self) -> int:
+        return self.bytes_up + self.bytes_down + self.bytes_sync
+
+
+@dataclass
+class CommLog:
+    rounds: List[RoundComm] = field(default_factory=list)
+
+    def record(self, round_index: int, selected: int, bytes_up: int,
+               bytes_down: int, bytes_sync: int = 0) -> None:
+        self.rounds.append(RoundComm(round_index, selected, int(bytes_up),
+                                     int(bytes_down), int(bytes_sync)))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.total for r in self.rounds)
+
+    def summary(self) -> Dict[str, float]:
+        if not self.rounds:
+            return {}
+        ups = [r.bytes_up for r in self.rounds]
+        return {
+            "rounds": len(self.rounds),
+            "total_GB": self.total_bytes / 1e9,
+            "mean_up_MB": float(np.mean(ups)) / 1e6,
+            "mean_selected": float(np.mean([r.selected for r in self.rounds])),
+        }
+
+
+def split_round_bytes(selected: int, batch: int, seq: int, cut_dim: int,
+                      itemsize: int, client_param_bytes: int = 0,
+                      sync: bool = True) -> Dict[str, int]:
+    act = selected * batch * seq * cut_dim * itemsize
+    return {
+        "up": act,
+        "down": act,
+        "sync": client_param_bytes if sync else 0,
+    }
+
+
+def federated_round_bytes(selected: int, model_bytes: int) -> int:
+    return 2 * selected * model_bytes
+
+
+def centralized_upload_bytes(num_examples: int, example_bytes: int) -> int:
+    return num_examples * example_bytes

@@ -1,0 +1,264 @@
+"""One fused WSSL communication round for the transformer stack.
+
+All of Algorithm 1 + Algorithm 2 as a single jit-able function over a fixed
+client axis:
+
+  importance → Gumbel-top-k selection mask → per-client split forward /
+  two-phase backward (client stages vmapped over the stacked client axis,
+  server stage shared) → masked optimizer step → per-client validation →
+  importance EMA update → weighted aggregation (+ optional client sync).
+
+Unselected clients are *masked*, not removed — shapes stay static so one
+compiled executable serves every round, and on a TPU mesh each client group
+simply multiplies by 0/1 (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig, WSSLConfig
+from repro.core import wssl
+from repro.models import transformer as tf
+from repro.optim import adamw_update, clip_by_global_norm, make_optimizer
+from repro.sharding import current_mesh, shard_activation
+
+Params = Any
+
+
+class WSSLState(NamedTuple):
+    client_stack: Params          # client stages, leaves (N, ...)
+    server_params: Params
+    opt_client: Any
+    opt_server: Any
+    importance: jax.Array         # (N,) normalized
+    round_index: jax.Array        # int32
+    rng: jax.Array
+
+
+class RoundMetrics(NamedTuple):
+    loss: jax.Array
+    per_client_loss: jax.Array    # (N,) train loss (masked clients -> 0)
+    val_loss: jax.Array           # (N,) validation loss per client
+    mask: jax.Array               # (N,) participation
+    importance: jax.Array         # (N,) post-update weights
+    bytes_up: jax.Array
+    bytes_down: jax.Array
+
+
+def init_state(rng, model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
+               train_cfg: TrainConfig) -> Tuple[WSSLState, WSSLState]:
+    """Initialize N client stages (identical start) + server stage.
+
+    Returns (state, state_axes) where state_axes mirrors the state with
+    logical sharding-axis tuples at the leaves (client-stage leaves get a
+    leading "client" axis).
+    """
+    cut = wssl_cfg.resolve_split(model_cfg)
+    params, axes = tf.init_params(rng, model_cfg)
+    client, server = tf.split_params(params, model_cfg, cut)
+    client_axes, server_axes = tf.split_axes(axes, model_cfg, cut)
+    n = wssl_cfg.num_clients
+    client_stack = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), client)
+
+    def _is_axes_leaf(a):
+        return isinstance(a, tuple) and all(
+            isinstance(e, (str, type(None), tuple)) for e in a)
+
+    stacked_axes = jax.tree.map(lambda t: ("client",) + tuple(t),
+                                client_axes, is_leaf=_is_axes_leaf)
+    opt_init, _ = make_optimizer(train_cfg.optimizer)
+
+    def opt_axes(p_axes):
+        if train_cfg.optimizer == "adamw":
+            from repro.optim.optimizers import AdamState
+            return AdamState(step=(), m=p_axes, v=p_axes)
+        from repro.optim.optimizers import SgdState
+        return SgdState(step=(), mom=p_axes)
+
+    state = WSSLState(
+        client_stack=client_stack,
+        server_params=server,
+        opt_client=opt_init(client_stack),
+        opt_server=opt_init(server),
+        importance=jnp.full((n,), 1.0 / n, jnp.float32),
+        round_index=jnp.zeros((), jnp.int32),
+        rng=jax.random.fold_in(rng, 1),
+    )
+    state_axes = WSSLState(
+        client_stack=stacked_axes,
+        server_params=server_axes,
+        opt_client=opt_axes(stacked_axes),
+        opt_server=opt_axes(server_axes),
+        importance=(None,),
+        round_index=(),
+        rng=(),
+    )
+    return state, state_axes
+
+
+def abstract_state(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
+                   train_cfg: TrainConfig) -> Tuple[WSSLState, WSSLState]:
+    """(ShapeDtypeStruct state, state axes) without allocating anything."""
+    cell = {}
+
+    def f(r):
+        st, ax = init_state(r, model_cfg, wssl_cfg, train_cfg)
+        cell["axes"] = ax
+        return st
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, cell["axes"]
+
+
+def _client_spmd_axes():
+    """spmd_axis_name for client-axis vmaps: binds the vmapped (client) dim
+    to the data-parallel mesh axes so sharding constraints *inside* the
+    per-client computation keep the client dim sharded instead of letting
+    SPMD propagation replicate it (decisive for MoE dispatch buffers)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _client_vmap(fn):
+    spmd = _client_spmd_axes()
+    if spmd is None:
+        return jax.vmap(fn)
+    return jax.vmap(fn, spmd_axis_name=spmd)
+
+
+def _per_client_losses(cfg: ModelConfig, server_params: Params,
+                       acts: jax.Array, labels: jax.Array, impl: str,
+                       remat: bool, remat_span: int = 1
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Server stage over stacked activations -> ((N,) losses, aux).
+
+    Uses the chunked cross-entropy so the (N, b, S, V) logits tensor never
+    materializes (decisive for 256k-vocab architectures)."""
+    def one(a, y):
+        return tf.server_loss(server_params, cfg, a, y, impl=impl,
+                              remat=remat, remat_span=remat_span)
+
+    losses, auxes = _client_vmap(one)(acts, labels)
+    return losses, auxes.mean()
+
+
+def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
+               val_batch: Optional[Dict[str, jax.Array]] = None, *,
+               model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
+               train_cfg: TrainConfig, schedule,
+               impl: str = "chunked") -> Tuple[WSSLState, RoundMetrics]:
+    """One communication round.  batch: tokens/labels (N, b, S);
+    val_batch: tokens/labels (bv, S) — the server-held ζ.  When val_batch is
+    None the validation pass is skipped and importance weights carry over
+    (used by the dry-run, which lowers the train step alone; the production
+    launcher runs the validation step at a lower cadence)."""
+    n = wssl_cfg.num_clients
+    remat = train_cfg.remat
+    rng, rng_sel = jax.random.split(state.rng)
+
+    # ---- Algorithm 1: selection --------------------------------------
+    k = wssl_cfg.num_selected()
+    idx = wssl.weighted_sample(rng_sel, state.importance, k)
+    mask = wssl.selection_mask(idx, n)
+    mask = jnp.where(state.round_index == 0, jnp.ones_like(mask), mask)
+    agg_w = wssl.aggregation_weights(state.importance, mask, wssl_cfg)
+
+    tokens = shard_activation(batch["tokens"], "client", None, None)
+    labels = shard_activation(batch["labels"], "client", None, None)
+    embeds = batch.get("embeds")
+
+    # ---- Algorithm 2 steps 2-4: split fwd / two-phase backward --------
+    span = train_cfg.remat_span
+
+    def client_fn(cstack):
+        def one(cp, toks, emb):
+            return tf.client_forward(cp, model_cfg, toks, embeds=emb,
+                                     impl=impl, remat=remat, remat_span=span)
+        if embeds is not None:
+            return _client_vmap(one)(cstack, tokens, embeds)
+        return _client_vmap(lambda cp, t: one(cp, t, None))(cstack, tokens)
+
+    acts, client_vjp = jax.vjp(client_fn, state.client_stack)
+    acts = shard_activation(acts, "client", None, None, None)
+
+    def server_loss(sp, a):
+        losses, aux = _per_client_losses(model_cfg, sp, a, labels, impl,
+                                         remat, span)
+        total = jnp.sum(agg_w * mask * losses) + aux
+        return total, losses
+
+    (loss, pcl), (g_server, g_acts) = jax.value_and_grad(
+        server_loss, argnums=(0, 1), has_aux=True)(state.server_params, acts)
+    (g_client,) = client_vjp(g_acts)
+
+    if train_cfg.grad_clip:
+        g_client, _ = clip_by_global_norm(g_client, train_cfg.grad_clip)
+        g_server, _ = clip_by_global_norm(g_server, train_cfg.grad_clip)
+
+    # ---- optimizer (masked for unselected clients) ---------------------
+    _, opt_update = make_optimizer(train_cfg.optimizer)
+    lr = schedule(state.round_index)
+    new_cstack, new_opt_c = opt_update(
+        state.client_stack, g_client, state.opt_client, lr=lr,
+        weight_decay=train_cfg.weight_decay, mask=mask)
+    new_server, new_opt_s = opt_update(
+        state.server_params, g_server, state.opt_server, lr=lr,
+        weight_decay=train_cfg.weight_decay)
+
+    # ---- validation on the server-held ζ → importance ------------------
+    if val_batch is not None:
+        vt, vl = val_batch["tokens"], val_batch["labels"]
+
+        def val_one(cp):
+            a = tf.client_forward(cp, model_cfg, vt, impl=impl, remat=remat)
+            loss, _ = tf.server_loss(new_server, model_cfg, a, vl,
+                                     impl=impl, remat=remat)
+            return loss
+
+        val_losses = _client_vmap(val_one)(new_cstack)
+        importance = wssl.compute_importance(val_losses, wssl_cfg,
+                                             prev=state.importance)
+    else:
+        val_losses = jnp.zeros((n,), jnp.float32)
+        importance = state.importance
+
+    # ---- Algorithm 2 step 5: weighted aggregation + sync ----------------
+    agg_final = wssl.aggregation_weights(importance, mask, wssl_cfg)
+    global_client = wssl.weighted_average(new_cstack, agg_final)
+    new_cstack = wssl.broadcast_global(new_cstack, global_client)
+
+    # ---- communication accounting --------------------------------------
+    act_bytes = jnp.asarray(acts.size // n * acts.dtype.itemsize, jnp.float32)
+    sel = mask.sum()
+    metrics = RoundMetrics(
+        loss=loss, per_client_loss=pcl * mask, val_loss=val_losses,
+        mask=mask, importance=importance,
+        bytes_up=sel * act_bytes, bytes_down=sel * act_bytes,
+    )
+    new_state = WSSLState(
+        client_stack=new_cstack, server_params=new_server,
+        opt_client=new_opt_c, opt_server=new_opt_s,
+        importance=importance, round_index=state.round_index + 1, rng=rng)
+    return new_state, metrics
+
+
+def make_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
+                  train_cfg: TrainConfig, impl: str = "chunked"):
+    """jit-ready round function with static configs closed over."""
+    from repro.optim.schedule import make_schedule
+    schedule = make_schedule(train_cfg.schedule, train_cfg.learning_rate,
+                             train_cfg.warmup_steps, train_cfg.rounds)
+    return functools.partial(wssl_round, model_cfg=model_cfg,
+                             wssl_cfg=wssl_cfg, train_cfg=train_cfg,
+                             schedule=schedule, impl=impl)

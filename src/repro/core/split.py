@@ -1,0 +1,74 @@
+"""Algorithm 2's dual-backprop split step, as explicit two-phase VJP.
+
+``split_grads`` is the paper's protocol, verbatim:
+
+  1. client forward  → intermediate activation a   (the "upload")
+  2. server forward + backward → loss, ∂L/∂a        (the "download")
+  3. client backward with the injected cotangent
+
+It is numerically identical to end-to-end ``jax.grad`` (property-tested in
+tests/test_split.py) — the protocol changes *where* compute happens, not the
+math.  ``bytes_up`` / ``bytes_down`` feed the communication accounting
+(core/protocol.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class SplitStepResult(NamedTuple):
+    loss: jax.Array
+    grads_client: Params
+    grads_server: Params
+    activation: jax.Array       # what crossed the cut (for accounting/tests)
+    bytes_up: int
+    bytes_down: int
+
+
+def split_grads(client_fn: Callable[[Params], jax.Array],
+                server_loss_fn: Callable[[Params, jax.Array], jax.Array],
+                client_params: Params,
+                server_params: Params) -> SplitStepResult:
+    """One split-learning fwd/bwd.
+
+    client_fn(client_params) -> activation  (client data is closed over —
+    it never appears in the server phase, which sees only the activation).
+    server_loss_fn(server_params, activation) -> scalar loss.
+    """
+    # Phase 1 — client-side forward (Algorithm 2, step 2)
+    activation, client_vjp = jax.vjp(client_fn, client_params)
+
+    # Phase 2 — server-side forward + backward (step 3).  The activation is
+    # a *leaf* input here: exactly the paper's "detach from computation
+    # graph and forward to server".
+    loss, server_vjp = jax.vjp(server_loss_fn, server_params, activation)
+    grads_server, grad_activation = server_vjp(jnp.ones_like(loss))
+
+    # Phase 3 — client-side update from the returned gradient (step 4)
+    (grads_client,) = client_vjp(grad_activation)
+
+    nbytes = lambda x: sum(l.size * l.dtype.itemsize
+                           for l in jax.tree.leaves(x))
+    return SplitStepResult(
+        loss=loss,
+        grads_client=grads_client,
+        grads_server=grads_server,
+        activation=activation,
+        bytes_up=nbytes(activation),
+        bytes_down=nbytes(grad_activation),
+    )
+
+
+def end_to_end_grads(client_fn, server_loss_fn, client_params, server_params):
+    """Reference: the same objective differentiated end-to-end."""
+    def full(cp, sp):
+        return server_loss_fn(sp, client_fn(cp))
+    loss, grads = jax.value_and_grad(full, argnums=(0, 1))(client_params,
+                                                           server_params)
+    return loss, grads[0], grads[1]

@@ -1,0 +1,62 @@
+"""Client data partitioning: IID, stratified (the paper's CIFAR protocol),
+and Dirichlet non-IID (the skew regime WSSL targets, §II-E)."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def partition_iid(n: int, num_clients: int, seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    return [np.sort(p) for p in np.array_split(perm, num_clients)]
+
+
+def partition_stratified(labels: np.ndarray, num_clients: int,
+                         seed: int = 0) -> List[np.ndarray]:
+    """Each client gets the same class distribution (paper §IV-B)."""
+    rng = np.random.default_rng(seed)
+    parts: List[List[int]] = [[] for _ in range(num_clients)]
+    for c in np.unique(labels):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        for i, chunk in enumerate(np.array_split(idx, num_clients)):
+            parts[i].extend(chunk.tolist())
+    return [np.sort(np.array(p, dtype=np.int64)) for p in parts]
+
+
+def partition_dirichlet(labels: np.ndarray, num_clients: int,
+                        alpha: float = 0.3, seed: int = 0,
+                        min_per_client: int = 8) -> List[np.ndarray]:
+    """Label-skewed non-IID split: class c mass over clients ~ Dir(alpha)."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(labels)
+    parts: List[List[int]] = [[] for _ in range(num_clients)]
+    for c in classes:
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        probs = rng.dirichlet(np.full(num_clients, alpha))
+        cuts = (np.cumsum(probs) * len(idx)).astype(int)[:-1]
+        for i, chunk in enumerate(np.split(idx, cuts)):
+            parts[i].extend(chunk.tolist())
+    # guarantee a floor so every client can form a batch
+    sizes = [len(p) for p in parts]
+    donor_order = np.argsort(sizes)[::-1]
+    for i in range(num_clients):
+        j = 0
+        while len(parts[i]) < min_per_client:
+            d = donor_order[j % num_clients]
+            if d != i and len(parts[d]) > min_per_client:
+                parts[i].append(parts[d].pop())
+            j += 1
+    return [np.sort(np.array(p, dtype=np.int64)) for p in parts]
+
+
+def partition_by_subject(subjects: np.ndarray, num_clients: int
+                         ) -> List[np.ndarray]:
+    """Assign whole subjects to clients (the gait dataset's natural split)."""
+    uniq = np.unique(subjects)
+    groups = np.array_split(uniq, num_clients)
+    return [np.sort(np.flatnonzero(np.isin(subjects, g))) for g in groups]

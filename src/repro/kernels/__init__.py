@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel follows the <name>.py (pl.pallas_call + BlockSpec VMEM tiling)
++ ops.py (jit'd dispatch wrapper; interpret mode on CPU) + ref.py (pure-jnp
+oracle) convention, with shape/dtype sweep tests in tests/test_kernels.py:
+
+* flash_attention — blocked online-softmax attention (causal / sliding
+                    window / GQA / logit softcap)
+* ssd_scan        — Mamba-2 SSD chunked scan (MXU-dense intra-chunk +
+                    VMEM-carried inter-chunk state)
+* rg_lru          — RG-LRU recurrence (width-blocked sequential scan)
+* wavg            — WSSL's fused weighted client-parameter aggregation
+                    (single-pass over stacked client stages)
+"""

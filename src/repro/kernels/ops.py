@@ -1,0 +1,59 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode; on real TPU the
+same calls compile to Mosaic.  Every wrapper accepts the model-layer layouts
+(e.g. (B,S,H,hd) attention tensors) and handles the transposes/padding.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rg_lru as _lru
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import wavg as _wavg
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    logit_softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Model layout: q (B,S,Hq,hd); k,v (B,S,Hkv,hd) -> (B,S,Hq,hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _fa.flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window, scale=scale,
+        logit_softcap=logit_softcap, block_q=block_q, block_k=block_k,
+        interpret=not _on_tpu())
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd_scan(x, dt, a, b_, c_, *, chunk: int = 128, block_h: int = 8):
+    return _ssd.ssd_scan(x, dt, a, b_, c_, chunk=chunk, block_h=block_h,
+                         interpret=not _on_tpu())
+
+
+def rg_lru_scan(log_a, b, *, chunk: int = 128, block_w: int = 512):
+    return _lru.rg_lru_scan(log_a, b, chunk=chunk, block_w=block_w,
+                            interpret=not _on_tpu())
+
+
+def weighted_average(stacked: jax.Array, weights: jax.Array,
+                     *, block_m: int = 2048) -> jax.Array:
+    """Any-rank stacked leaf (N, ...) -> (...)."""
+    n = stacked.shape[0]
+    flat = stacked.reshape(n, -1)
+    out = _wavg.weighted_average_2d(flat, weights, block_m=block_m,
+                                    interpret=not _on_tpu())
+    return out.reshape(stacked.shape[1:])

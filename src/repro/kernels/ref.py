@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    logit_softcap: Optional[float] = None) -> jax.Array:
+    """q: (B,Hq,Sq,hd); k,v: (B,Hkv,Sk,hd)."""
+    b, hq, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b_: jax.Array,
+             c_: jax.Array) -> jax.Array:
+    """Sequential (step-by-step) SSD reference.  Shapes as kernels/ssd_scan."""
+    bsz, s, h, p = x.shape
+    n = b_.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                     # (B,H,P),(B,H),(B,N),(B,N)
+        da = jnp.exp(dtt * a)                     # (B,H)
+        state = state * da[..., None, None] + (
+            dtt[..., None, None] * bt[:, None, :, None] * xt[:, :, None, :])
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          b_.transpose(1, 0, 2).astype(jnp.float32),
+          c_.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def rg_lru_scan(log_a: jax.Array, b: jax.Array) -> jax.Array:
+    """Sequential LRU reference.  log_a, b: (B,S,W)."""
+    def step(h, inp):
+        la, bt = inp
+        h = jnp.exp(la) * h + bt
+        return h, h
+
+    h0 = jnp.zeros((log_a.shape[0], log_a.shape[2]), jnp.float32)
+    xs = (log_a.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32))
+    _, hs = jax.lax.scan(step, h0, xs)
+    return hs.transpose(1, 0, 2).astype(b.dtype)
+
+
+def weighted_average_2d(stacked: jax.Array, weights: jax.Array) -> jax.Array:
+    return (weights.astype(jnp.float32) @ stacked.astype(jnp.float32)
+            ).astype(stacked.dtype)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Grid: (batch, chunks) with the chunk dimension sequential; the running
+inter-chunk state (H, N, P) lives in VMEM scratch and is re-zeroed at the
+start of each batch row.  Within a chunk everything is dense matmuls
+(MXU-friendly): the intra-chunk "attention" C·Bᵀ⊙L and the state
+update/readout einsums.
+
+Inputs are pre-projected/pre-conv'd (the block's matmuls run outside):
+  x  (B, S, H, P)   head inputs
+  dt (B, S, H)      positive step sizes (fp32)
+  a  (H,)           negative decay rates  (fp32)
+  b_ (B, S, N)      input projections (shared across heads)
+  c_ (B, S, N)      output projections
+Output: y (B, S, H, P).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _reset():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, H)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+    a = a_ref[...].astype(jnp.float32)        # (H,)
+
+    da = dt * a                               # (Q, H) <= 0
+    cum = jnp.cumsum(da, axis=0)              # (Q, H)
+    cum_end = cum[-1]                         # (H,)
+
+    # intra-chunk
+    diff = cum[:, None, :] - cum[None, :, :]  # (Qi, Qj, H)
+    qidx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = (kidx <= qidx)[..., None]
+    L = jnp.exp(jnp.where(tri, diff, -jnp.inf))   # (Qi, Qj, H); mask pre-exp
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))  # (Qi, Qj)
+    att = cb[..., None] * L * dt[None, :, :]  # (Qi, Qj, H)
+    y_intra = jnp.einsum("ijh,jhp->ihp", att, x)
+
+    # inter-chunk: read previous state
+    prev = state_ref[...].astype(jnp.float32)             # (H, N, P)
+    y_inter = jnp.einsum("qn,hnp->qhp", c, prev) * jnp.exp(cum)[..., None]
+
+    # state update
+    decay_to_end = jnp.exp(cum_end[None, :] - cum) * dt   # (Q, H)
+    s_new = jnp.einsum("qn,qh,qhp->hnp", b, decay_to_end, x)
+    state_ref[...] = (jnp.exp(cum_end)[:, None, None] * prev + s_new
+                      ).astype(state_ref.dtype)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b_: jax.Array,
+             c_: jax.Array, *, chunk: int = 128, block_h: int = 8,
+             interpret: bool = False) -> jax.Array:
+    bsz, s, h, p = x.shape
+    n = b_.shape[-1]
+    chunk = min(chunk, s)
+    block_h = min(block_h, h)
+    assert s % chunk == 0 and h % block_h == 0, (s, chunk, h, block_h)
+    nc, nh = s // chunk, h // block_h
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, nh, nc),
+        in_specs=[
+            pl.BlockSpec((block_h,), lambda b__, hi, j: (hi,)),
+            pl.BlockSpec((1, chunk, block_h, p),
+                         lambda b__, hi, j: (b__, j, hi, 0)),
+            pl.BlockSpec((1, chunk, block_h), lambda b__, hi, j: (b__, j, hi)),
+            pl.BlockSpec((1, chunk, n), lambda b__, hi, j: (b__, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b__, hi, j: (b__, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_h, p),
+                               lambda b__, hi, j: (b__, j, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_h, n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, x, dt, b_, c_)

@@ -1,0 +1,72 @@
+"""Batched serving driver: prefill a batch of prompts, then decode tokens
+step by step with the merged WSSL global model (client-global + server).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_arch, reduced
+from repro.data.synthetic import make_token_stream
+from repro.models import transformer as tf
+
+
+def generate(params, cfg, prompts: jax.Array, gen: int, *,
+             impl: str = "dense", temperature: float = 0.0,
+             rng=None):
+    """Greedy / temperature batched generation."""
+    b, s0 = prompts.shape
+    max_len = s0 + gen
+    logits, cache = tf.prefill(params, cfg, prompts, max_len=max_len,
+                               impl=impl)
+    decode = jax.jit(lambda p, t, c, pos: tf.decode_step(p, cfg, t, c, pos))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for t in range(gen - 1):
+        logits, cache = decode(params, tok, cache, jnp.asarray(s0 + t))
+        if temperature > 0:
+            rng, sub = jax.random.split(rng)
+            tok = jax.random.categorical(sub, logits[:, 0] / temperature
+                                         )[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--impl", default="dense")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    params, _ = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
+    prompts = jnp.asarray(make_token_stream(args.batch, args.prompt_len,
+                                            cfg.vocab_size, seed=args.seed))
+    t0 = time.time()
+    toks = generate(params, cfg, prompts, args.gen, impl=args.impl)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}: {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("sample continuation:", np.asarray(toks[0])[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

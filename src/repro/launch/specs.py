@@ -1,0 +1,150 @@
+"""Input specs (ShapeDtypeStruct stand-ins) + sharding-rule construction for
+every (architecture × input shape × mesh) combination.
+
+Nothing here allocates device memory — specs feed ``jit(...).lower()``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.config import (INPUT_SHAPES, ModelConfig, ShapeConfig, TrainConfig,
+                          WSSLConfig)
+from repro.launch.mesh import data_axis_size, model_axis_size
+from repro.models import transformer as tf
+from repro.sharding import default_rules, resolve_spec
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+
+def build_rules(mesh: Mesh, model_cfg: ModelConfig, kind: str,
+                global_batch: int, overrides: Optional[Dict] = None) -> Dict:
+    """Per-(arch, shape, mesh) logical→physical binding (DESIGN.md §5)."""
+    multi = "pod" in mesh.shape
+    rules = default_rules(multi)
+    msize = model_axis_size(mesh)
+    dsize = data_axis_size(mesh)
+
+    # Head-parallel attention needs BOTH the flat head count and one of the
+    # GQA-grouped dims (kv_heads K or group G) to divide the model axis —
+    # the attention math reshapes (H,) -> (K, G), and a non-dividing split
+    # replicates q across the axis.  Otherwise: sequence-parallel attention.
+    h, kh = model_cfg.num_heads, max(model_cfg.num_kv_heads, 1)
+    g = h // kh if kh else 0
+    head_ok = h and h % msize == 0 and (kh % msize == 0 or g % msize == 0)
+    if model_cfg.num_heads and not head_ok:
+        rules["act_heads"] = None      # params still shard on "heads"
+        rules["attn_seq"] = "model"
+    if model_cfg.num_heads and model_cfg.num_heads % msize != 0:
+        # heads cannot shard the model axis at all: shard attention weights
+        # on the d_model dim instead of replicating them across it
+        rules["attn_din"] = "model"
+        rules["attn_dout"] = "model"
+
+    # MoE dispatch intermediates (token-major, flattened) shard over the
+    # data axes outside the client-vmapped train step.
+    if kind in ("prefill", "decode"):
+        rules["moe_tokens"] = ("pod", "data") if multi else ("data",)
+        # serving stores bf16 params; skip FSDP (and its per-layer gathers)
+        # whenever the model-sharded copy fits comfortably (§Perf A2)
+        if model_cfg.param_count() * 2 / msize < 1.5e9:
+            rules["fsdp"] = None
+    if kind == "train":
+        # the client axis occupies the dp mesh axes (via vmap
+        # spmd_axis_name); inner per-client batch dims stay local.
+        rules["batch"] = None
+
+    if kind == "decode":
+        # decode KV caches shard over the model axis (heads rarely divide);
+        # tiny global batches additionally spread KV over the data axes.
+        if global_batch < dsize:
+            rules["batch"] = None
+            rules["kv_seq"] = (("pod", "data", "model") if multi
+                               else ("data", "model"))
+        else:
+            rules["kv_seq"] = "model"
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(model_cfg: ModelConfig, shape: ShapeConfig,
+                wssl_cfg: Optional[WSSLConfig] = None
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(ShapeDtypeStruct tree, logical-axes tree) for the step's data input."""
+    s, gb = shape.seq_len, shape.global_batch
+    f = model_cfg.frontend_tokens if model_cfg.frontend == "vision" else 0
+    if shape.kind == "train":
+        n = wssl_cfg.num_clients
+        b = max(gb // n, 1)
+        specs = {"tokens": _sds((n, b, s - f), "int32"),
+                 "labels": _sds((n, b, s - f), "int32")}
+        axes = {"tokens": ("client", None, None),
+                "labels": ("client", None, None)}
+        if f:
+            specs["embeds"] = _sds((n, b, f, model_cfg.d_model), model_cfg.dtype)
+            axes["embeds"] = ("client", None, None, None)
+        return specs, axes
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((gb, s - f), "int32")}
+        axes = {"tokens": ("batch", None)}
+        if f:
+            specs["embeds"] = _sds((gb, f, model_cfg.d_model), model_cfg.dtype)
+            axes["embeds"] = ("batch", None, None)
+        return specs, axes
+    # decode: one new token against a seq_len-deep cache
+    specs = {"tokens": _sds((gb, 1), "int32"),
+             "pos": _sds((), "int32")}
+    axes = {"tokens": ("batch", None), "pos": ()}
+    return specs, axes
+
+
+def serve_param_specs(model_cfg: ModelConfig):
+    """Serving stores parameters in bf16 (checkpoint-side cast)."""
+    shapes, axes = tf.abstract_params(model_cfg)
+    bf16 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), shapes)
+    return bf16, axes
+
+
+def cache_specs(model_cfg: ModelConfig, shape: ShapeConfig
+                ) -> Tuple[Any, Any]:
+    """Abstract KV/state cache for decode shapes."""
+    override = (model_cfg.long_context_window
+                if shape.name == "long_500k" else None)
+    cache_shapes = jax.eval_shape(
+        lambda: tf.init_cache(model_cfg, shape.global_batch, shape.seq_len,
+                              decode_window_override=override))
+    return cache_shapes, tf.cache_axes(model_cfg)
+
+
+def shardings_from_axes(mesh: Mesh, rules: Dict, axes_tree, shapes_tree):
+    """NamedSharding tree matching an (axes, shapes) pair."""
+    def is_axes_leaf(a):
+        return isinstance(a, tuple) and all(
+            isinstance(e, (str, type(None), tuple)) for e in a)
+
+    def one(axes, sds):
+        return NamedSharding(mesh, resolve_spec(mesh, rules, axes, sds.shape))
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes_leaf)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PartitionSpec())

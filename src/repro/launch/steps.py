@@ -1,0 +1,81 @@
+"""The step functions the dry-run lowers and the launchers drive.
+
+* train_4k      → one WSSL communication round (selection + split fwd/bwd +
+                  masked optimizer + weighted aggregation); validation runs
+                  as a separate step at lower cadence.
+* prefill_32k   → full-sequence forward, last-position logits.
+* decode_32k /
+  long_500k     → one-token serve step against a seq_len-deep cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig, WSSLConfig
+from repro.core.round import WSSLState, wssl_round
+from repro.models import transformer as tf
+from repro.optim.schedule import make_schedule
+
+
+def make_train_step(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
+                    train_cfg: TrainConfig, impl: str = "chunked"):
+    schedule = make_schedule(train_cfg.schedule, train_cfg.learning_rate,
+                             train_cfg.warmup_steps, train_cfg.rounds)
+
+    def train_step(state: WSSLState, batch: Dict[str, jax.Array]):
+        return wssl_round(state, batch, None, model_cfg=model_cfg,
+                          wssl_cfg=wssl_cfg, train_cfg=train_cfg,
+                          schedule=schedule, impl=impl)
+
+    return train_step
+
+
+def make_val_step(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
+                  train_cfg: TrainConfig, impl: str = "chunked"):
+    """Per-client validation -> new importance weights (Algorithm 1 line 6)."""
+
+    def val_step(state: WSSLState, val_batch: Dict[str, jax.Array]):
+        from repro.core import wssl as w
+        vt, vl = val_batch["tokens"], val_batch["labels"]
+
+        def one(cp):
+            a = tf.client_forward(cp, model_cfg, vt, impl=impl,
+                                  remat=train_cfg.remat)
+            loss, _ = tf.server_loss(state.server_params, model_cfg, a, vl,
+                                     impl=impl, remat=train_cfg.remat)
+            return loss
+
+        val_losses = jax.vmap(one)(state.client_stack)
+        importance = w.compute_importance(val_losses, wssl_cfg,
+                                          prev=state.importance)
+        return state._replace(importance=importance), val_losses
+
+    return val_step
+
+
+def make_prefill_step(model_cfg: ModelConfig, impl: str = "chunked"):
+    def prefill_step(params, batch):
+        logits, _ = tf.forward(params, model_cfg, batch["tokens"],
+                               embeds=batch.get("embeds"), impl=impl,
+                               remat=False, last_only=True)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(model_cfg: ModelConfig, shape: ShapeConfig):
+    override = (model_cfg.long_context_window
+                if shape.name == "long_500k" else None)
+
+    def serve_step(params, cache, batch):
+        logits, new_cache = tf.decode_step(
+            params, model_cfg, batch["tokens"], cache, batch["pos"],
+            decode_window_override=override)
+        return logits, new_cache
+
+    return serve_step

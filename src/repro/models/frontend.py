@@ -1,0 +1,58 @@
+"""Modality frontend stubs (the one sanctioned carve-out, see DESIGN.md).
+
+* vision (qwen2-vl): the ViT+projector is stubbed — the model consumes
+  precomputed patch embeddings (B, frontend_tokens, d_model) prepended to the
+  text token embeddings, with M-RoPE grid positions for the patch span.
+* audio (musicgen): the EnCodec codec is stubbed — its *output tokens* are
+  the decoder's input stream (vocab 2048), so no embedding input is needed.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_param
+
+Params = Dict[str, Any]
+
+
+def frontend_init(rng, cfg: ModelConfig):
+    if cfg.frontend != "vision":
+        return {}, {}
+    # projector from (stub) encoder space to d_model; encoder dim == d_model
+    w, ax = dense_param(rng, (cfg.d_model, cfg.d_model), ("fsdp", "embed"))
+    return {"proj": w}, {"proj": ax}
+
+
+def splice_frontend(cfg: ModelConfig, p: Params, x_text: jax.Array,
+                    embeds: Optional[jax.Array]) -> jax.Array:
+    """Prepend projected patch embeddings to the text embeddings."""
+    if cfg.frontend != "vision" or embeds is None:
+        return x_text
+    vis = embeds @ p["proj"].astype(x_text.dtype)
+    return jnp.concatenate([vis, x_text], axis=1)
+
+
+def build_positions(cfg: ModelConfig, batch: int, text_len: int,
+                    vis_tokens: int) -> jax.Array:
+    """Positions for the spliced sequence.
+
+    mrope: vision span gets (t=0, h=row, w=col) grid positions; text span gets
+    sequential positions on all three streams starting after the grid extent.
+    """
+    if cfg.rope_kind != "mrope":
+        total = text_len + vis_tokens
+        return jnp.arange(total, dtype=jnp.int32)[None].repeat(batch, 0)
+    g = max(int(math.sqrt(max(vis_tokens, 1))), 1)
+    idx = jnp.arange(vis_tokens, dtype=jnp.int32)
+    vis = jnp.stack([jnp.zeros_like(idx), idx // g, idx % g], axis=-1)  # (F,3)
+    start = (vis_tokens + g - 1) // g + 1 if vis_tokens else 0
+    t = start + jnp.arange(text_len, dtype=jnp.int32)
+    text = jnp.stack([t, t, t], axis=-1)                                # (S,3)
+    pos = jnp.concatenate([vis, text], axis=0)                          # (F+S,3)
+    return pos[None].repeat(batch, 0)

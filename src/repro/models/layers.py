@@ -1,0 +1,209 @@
+"""Shared building blocks: param init helpers, norms, RoPE (+M-RoPE), MLPs.
+
+Every init function returns ``(params, axes)`` where ``axes`` mirrors the
+param tree with tuples of *logical* axis names per dimension (consumed by
+``repro.sharding``).  Params are plain nested dicts (pytrees).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding import shard_activation
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+
+def dense_param(rng, shape, axes, *, scale: Optional[float] = None,
+                dtype=jnp.float32, init: str = "normal"):
+    """One weight leaf + its logical axes."""
+    if init == "zeros":
+        w = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        w = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        w = scale * jax.random.normal(rng, shape, dtype)
+    return w, tuple(axes)
+
+
+def split_rng(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        params = {"scale": jnp.ones((d,), jnp.float32),
+                  "bias": jnp.zeros((d,), jnp.float32)}
+        axes = {"scale": ("embed",), "bias": ("embed",)}
+    else:  # rmsnorm — gemma-style (1 + scale) parameterization, init 0
+        params = {"scale": jnp.zeros((d,), jnp.float32)}
+        axes = {"scale": ("embed",)}
+    return params, axes
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Statistics in fp32, elementwise path in the activation dtype.
+
+    Only the (tiny) per-row statistics are kept in fp32 — upcasting the
+    whole activation would materialize an fp32 copy of every residual
+    stream per norm call (measured: the dominant live-buffer class in the
+    train-step memory profile, EXPERIMENTS.md §Perf)."""
+    dtype = x.dtype
+    if cfg.norm == "layernorm":
+        mu32 = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x.astype(jnp.float32) - mu32), axis=-1,
+                       keepdims=True)
+        inv = jax.lax.rsqrt(var + cfg.norm_eps)
+        y = (x - mu32.astype(dtype)) * inv.astype(dtype)
+        y = y * p["scale"].astype(dtype) + p["bias"].astype(dtype)
+    else:
+        ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                      keepdims=True)
+        inv = jax.lax.rsqrt(ms + cfg.norm_eps).astype(dtype)
+        y = x * inv * (1.0 + p["scale"]).astype(dtype)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard / partial / M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_dims(cfg: ModelConfig) -> int:
+    rot = int(cfg.head_dim * cfg.rope_fraction)
+    return rot - (rot % 2)
+
+
+def rope_freqs(cfg: ModelConfig) -> jax.Array:
+    rot = _rope_dims(cfg)
+    half = rot // 2
+    inv = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return inv  # (half,)
+
+
+def _mrope_sections(half: int) -> Tuple[int, int, int]:
+    """Qwen2-VL style 3-way split of frequency dims (t, h, w) ≈ 1:1.5:1.5."""
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return t, h, w
+
+
+def apply_rope(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: (..., S) or (..., S, 3) for mrope."""
+    if cfg.rope_kind == "none":
+        return x
+    rot = _rope_dims(cfg)
+    half = rot // 2
+    inv = rope_freqs(cfg)  # (half,)
+
+    if cfg.rope_kind == "mrope":
+        # positions (..., S, 3): temporal / height / width streams, each
+        # driving its own section of the frequency dims.
+        t, h, w = _mrope_sections(half)
+        sec = jnp.concatenate([
+            positions[..., 0:1].repeat(t, axis=-1),
+            positions[..., 1:2].repeat(h, axis=-1),
+            positions[..., 2:3].repeat(w, axis=-1),
+        ], axis=-1)  # (..., S, half)
+        angles = sec.astype(jnp.float32) * inv  # (..., S, half)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * inv  # (..., S, half)
+
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = out.astype(x.dtype)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out
+
+
+def text_positions(batch: int, seq: int, cfg: ModelConfig, offset=0) -> jax.Array:
+    pos = offset + jnp.arange(seq, dtype=jnp.int32)[None, :].repeat(batch, 0)
+    if cfg.rope_kind == "mrope":
+        return pos[..., None].repeat(3, axis=-1)  # text: all 3 streams equal
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    rngs = split_rng(rng, 3)
+    gated = cfg.activation in ("swiglu", "geglu")
+    params: Params = {}
+    axes: Axes = {}
+    if gated:
+        params["wg"], axes["wg"] = dense_param(rngs[0], (d, f), ("fsdp", "ff"))
+    params["wu"], axes["wu"] = dense_param(rngs[1], (d, f), ("fsdp", "ff"))
+    params["wd"], axes["wd"] = dense_param(rngs[2], (f, d), ("ff", "fsdp"),
+                                           scale=1.0 / math.sqrt(f))
+    if cfg.mlp_bias:
+        params["bu"] = jnp.zeros((f,), jnp.float32)
+        axes["bu"] = ("ff",)
+        params["bd"] = jnp.zeros((d,), jnp.float32)
+        axes["bd"] = ("embed",)
+    return params, axes
+
+
+def _act(cfg: ModelConfig, g: jax.Array) -> jax.Array:
+    if cfg.activation in ("swiglu",):
+        return jax.nn.silu(g)
+    if cfg.activation in ("geglu", "gelu"):
+        return jax.nn.gelu(g, approximate=True)
+    raise ValueError(cfg.activation)
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    gated = cfg.activation in ("swiglu", "geglu")
+    up = x @ p["wu"].astype(dtype)
+    if cfg.mlp_bias:
+        up = up + p["bu"].astype(dtype)
+    if gated:
+        gate = _act(cfg, x @ p["wg"].astype(dtype))
+        h = gate * up
+    else:
+        h = _act(cfg, up)
+    h = shard_activation(h, *(("batch",) + (None,) * (h.ndim - 2) + ("ff",)))
+    out = h @ p["wd"].astype(dtype)
+    if cfg.mlp_bias:
+        out = out + p["bd"].astype(dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

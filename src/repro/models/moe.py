@@ -1,0 +1,139 @@
+"""Mixture-of-Experts layer: softmax top-k router + capacity-bounded
+sort-based dispatch (TPU-native: static shapes, expert-parallel over the
+``model`` mesh axis, all-to-all emitted by SPMD at the dispatch reshard).
+
+Dense "compute every expert" dispatch would inflate HLO FLOPs by
+num_experts/top_k (8x for OLMoE); the sort-based path keeps compiled FLOPs
+at ``capacity_factor`` x the active FLOPs, which is what the roofline
+analysis needs to be meaningful.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_param, split_rng
+from repro.sharding import shard_activation
+
+Params = Dict[str, Any]
+
+
+def moe_init(rng, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    rngs = split_rng(rng, 4)
+    gated = cfg.activation in ("swiglu", "geglu")
+    params: Params = {}
+    axes: Dict[str, Any] = {}
+    params["router"], axes["router"] = dense_param(
+        rngs[0], (d, e), ("fsdp", None), scale=1.0 / math.sqrt(d))
+    if gated:
+        params["wg"], axes["wg"] = dense_param(rngs[1], (e, d, f), ("expert", "fsdp", None))
+    params["wu"], axes["wu"] = dense_param(rngs[2], (e, d, f), ("expert", "fsdp", None))
+    params["wd"], axes["wd"] = dense_param(
+        rngs[3], (e, f, d), ("expert", None, "fsdp"), scale=1.0 / math.sqrt(f))
+    return params, axes
+
+
+def _capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(math.ceil(num_tokens * cfg.experts_per_token * cfg.moe_capacity_factor
+                      / cfg.num_experts))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Sort-based dispatch: flatten tokens, route, sort assignments by expert,
+    place into (E, C, D) capacity buffers (overflow dropped), batched expert
+    matmuls, weighted combine back.
+
+    When the token stream is sharded over the data axes (prefill/decode —
+    ``moe_tokens`` rule bound), the sort/dispatch runs *locally per data
+    shard* via ``vmap(spmd_axis_name=…)``: a global argsort over sharded
+    tokens would otherwise make XLA all-gather the entire stream (measured
+    1.1 TB/device of gathers on olmoe prefill_32k, EXPERIMENTS.md §Perf).
+    The per-shard (E, C_local, D) buffers then reshard expert-parallel with
+    one all-to-all — 2D (token x expert) parallel MoE.
+    """
+    from repro.sharding import bound_axes
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    axes, dp = bound_axes("moe_tokens")
+    if dp > 1 and t % dp == 0 and (t // dp) >= 8 * cfg.num_experts:
+        out, aux = jax.vmap(
+            lambda xs: _moe_core(cfg, p, xs),
+            spmd_axis_name=axes)(xt.reshape(dp, t // dp, d))
+        return out.reshape(b, s, d), aux.mean()
+    out, aux = _moe_core(cfg, p, xt)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_core(cfg: ModelConfig, p: Params, xt: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Route + dispatch + expert compute + combine over a token batch."""
+    t, d = xt.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    dtype = xt.dtype
+
+    logits = (xt @ p["router"].astype(dtype)).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)                 # (T,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    ones = jnp.zeros((t, e), jnp.float32).at[
+        jnp.arange(t)[:, None], expert_ids].set(1.0)
+    f_e = ones.mean(axis=0) * e / k
+    p_e = probs.mean(axis=0)
+    aux = cfg.router_aux_coef * float(e) * jnp.sum(f_e * p_e)
+
+    # ---- dispatch -------------------------------------------------------
+    a = t * k
+    cap = _capacity(cfg, t)
+    e_flat = expert_ids.reshape(a)
+    g_flat = gate_vals.reshape(a).astype(dtype)
+    tok_flat = jnp.arange(t, dtype=jnp.int32).repeat(k)
+
+    order = jnp.argsort(e_flat)                       # stable
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    g_sorted = g_flat[order]
+
+    counts = jnp.bincount(e_flat, length=e)           # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(a, dtype=jnp.int32) - starts[e_sorted].astype(jnp.int32)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, e_sorted * cap + pos_in_e, e * cap)  # overflow slot
+
+    gathered = xt[tok_sorted] * keep[:, None].astype(dtype)
+    # pad the overflow slot region so the buffer's leading dim stays
+    # divisible (and therefore shardable) on the expert/model axis
+    pad = 16 - (e * cap) % 16 if (e * cap) % 16 else 16
+    buf = jnp.zeros((e * cap + pad, d), dtype).at[slot].set(gathered)
+    xe = buf[:e * cap].reshape(e, cap, d)
+    xe = shard_activation(xe, "expert", None, None)
+
+    # ---- expert compute ---------------------------------------------------
+    up = jnp.einsum("ecd,edf->ecf", xe, p["wu"].astype(dtype))
+    if "wg" in p:
+        gate = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dtype))
+        act = jax.nn.silu(gate) if cfg.activation == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(dtype))
+    ye = shard_activation(ye, "expert", None, None)
+
+    # ---- combine ----------------------------------------------------------
+    ye_flat = jnp.concatenate([ye.reshape(e * cap, d),
+                               jnp.zeros((1, d), dtype)], axis=0)
+    contrib = ye_flat[slot] * (g_sorted * keep.astype(dtype))[:, None]
+    out = jnp.zeros((t, d), dtype).at[tok_sorted].add(contrib)
+    return out, aux

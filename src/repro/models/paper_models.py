@@ -1,0 +1,199 @@
+"""The paper's own model architectures (Table I), in JAX.
+
+* GaitFFN — 5-layer fully-connected network (~32k params) for the Human
+  Gait Sensor binary (gender) classification task.  Client stage = first
+  ``split_layer`` layers (paper: a 2-layer front-end on the edge device),
+  server stage = the rest, ending in a sigmoid-friendly single logit.
+* ResNet18 — the CIFAR-10 model, split at a residual-stage boundary
+  ("the cut-off point", §V-C-2).
+
+Both expose ``client_apply`` / ``server_apply`` so the WSSL runtime
+(core/split.py) can drive them exactly like the transformer stack.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.wssl_paper import CifarConfig, GaitConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Gait FFN
+# ---------------------------------------------------------------------------
+
+
+def gait_init(rng, cfg: GaitConfig) -> Params:
+    dims = (cfg.in_features,) + cfg.hidden + (1,)
+    layers = []
+    for i in range(len(dims) - 1):
+        rng, sub = jax.random.split(rng)
+        w = jax.random.normal(sub, (dims[i], dims[i + 1]), jnp.float32)
+        w = w * math.sqrt(2.0 / dims[i])
+        layers.append({"w": w, "b": jnp.zeros((dims[i + 1],), jnp.float32)})
+    return {"layers": layers}
+
+
+def _apply_layers(layers: List[Params], x: jax.Array, *,
+                  final_is_output: bool) -> jax.Array:
+    """ReLU between layers; no activation after the network's output layer."""
+    for i, lp in enumerate(layers):
+        x = x @ lp["w"] + lp["b"]
+        if not (final_is_output and i == len(layers) - 1):
+            x = jax.nn.relu(x)
+    return x
+
+
+def gait_client_apply(cfg: GaitConfig, client_params: Params,
+                      x: jax.Array) -> jax.Array:
+    """Client stage on the *client-split* tree (layers [0, split))."""
+    return _apply_layers(client_params["layers"], x, final_is_output=False)
+
+
+def gait_server_apply(cfg: GaitConfig, server_params: Params,
+                      a: jax.Array) -> jax.Array:
+    """Server stage on the *server-split* tree (layers [split, n))."""
+    return _apply_layers(server_params["layers"], a, final_is_output=True)[..., 0]
+
+
+def gait_split_params(cfg: GaitConfig, params: Params) -> Tuple[Params, Params]:
+    return ({"layers": params["layers"][: cfg.split_layer]},
+            {"layers": params["layers"][cfg.split_layer:]})
+
+
+def gait_join_params(cfg: GaitConfig, client: Params, server: Params) -> Params:
+    return {"layers": list(client["layers"]) + list(server["layers"])}
+
+
+def gait_loss(logit: jax.Array, label: jax.Array) -> jax.Array:
+    """Binary cross-entropy with logits (paper uses sigmoid output)."""
+    logit = logit.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * label
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (CIFAR variant: 3x3 stem, no max-pool)
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32)
+    return w * math.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _bn(p, x, eps=1e-5):
+    # batch-independent norm (GroupNorm-1 style) — keeps the functional
+    # pytree simple (no running stats) while matching BN's role.
+    mu = x.mean(axis=(1, 2), keepdims=True)
+    var = x.var(axis=(1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def _block_init(rng, cin, cout, stride):
+    r = jax.random.split(rng, 3)
+    p = {
+        "conv1": _conv_init(r[0], 3, 3, cin, cout), "bn1": _bn_init(cout),
+        "conv2": _conv_init(r[1], 3, 3, cout, cout), "bn2": _bn_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(r[2], 1, 1, cin, cout)
+        p["bnp"] = _bn_init(cout)
+    return p
+
+
+def _block_apply(p, x, stride):
+    h = jax.nn.relu(_bn(p["bn1"], _conv(x, p["conv1"], stride)))
+    h = _bn(p["bn2"], _conv(h, p["conv2"]))
+    sc = x
+    if "proj" in p:
+        sc = _bn(p["bnp"], _conv(x, p["proj"], stride))
+    return jax.nn.relu(h + sc)
+
+
+def resnet_init(rng, cfg: CifarConfig) -> Params:
+    rngs = jax.random.split(rng, 2 + len(cfg.widths))
+    params: Params = {
+        "stem": {"conv": _conv_init(rngs[0], 3, 3, cfg.in_channels, cfg.widths[0]),
+                 "bn": _bn_init(cfg.widths[0])},
+        "stages": [],
+    }
+    cin = cfg.widths[0]
+    for s, (w, nb) in enumerate(zip(cfg.widths, cfg.blocks_per_stage)):
+        stage = []
+        br = jax.random.split(rngs[1 + s], nb)
+        for b in range(nb):
+            stride = 2 if (b == 0 and s > 0) else 1
+            stage.append(_block_init(br[b], cin, w, stride))
+            cin = w
+        params["stages"].append(stage)
+    params["fc"] = {
+        "w": jax.random.normal(rngs[-1], (cfg.widths[-1], cfg.num_classes),
+                               jnp.float32) / math.sqrt(cfg.widths[-1]),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    return params
+
+
+def _resnet_stage_apply(cfg: CifarConfig, stage_params, x, s):
+    for b, bp in enumerate(stage_params):
+        stride = 2 if (b == 0 and s > 0) else 1
+        x = _block_apply(bp, x, stride)
+    return x
+
+
+def resnet_client_apply(cfg: CifarConfig, params: Params, x: jax.Array) -> jax.Array:
+    """Stem + stages[:split_stage] — the edge-device front-end."""
+    h = jax.nn.relu(_bn(params["stem"]["bn"], _conv(x, params["stem"]["conv"])))
+    for s in range(cfg.split_stage):
+        h = _resnet_stage_apply(cfg, params["stages"][s], h, s)
+    return h
+
+
+def resnet_server_apply(cfg: CifarConfig, params: Params, a: jax.Array) -> jax.Array:
+    h = a
+    for s in range(cfg.split_stage, len(cfg.widths)):
+        h = _resnet_stage_apply(cfg, params["stages"][s - cfg.split_stage], h, s)
+    h = h.mean(axis=(1, 2))
+    return h @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def resnet_split_params(cfg: CifarConfig, params: Params) -> Tuple[Params, Params]:
+    client = {"stem": params["stem"], "stages": params["stages"][: cfg.split_stage]}
+    server = {"stages": params["stages"][cfg.split_stage:], "fc": params["fc"]}
+    return client, server
+
+
+def resnet_join_params(cfg: CifarConfig, client: Params, server: Params) -> Params:
+    return {"stem": client["stem"],
+            "stages": list(client["stages"]) + list(server["stages"]),
+            "fc": server["fc"]}
+
+
+def resnet_init_split(rng, cfg: CifarConfig) -> Tuple[Params, Params]:
+    return resnet_split_params(cfg, resnet_init(rng, cfg))
+
+
+def softmax_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)

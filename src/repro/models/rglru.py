@@ -1,0 +1,154 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t),
+a_t = exp(-c · softplus(Λ) · r_t),   r_t, i_t = sigmoid(gates(u_t)),
+
+computed with ``jax.lax.associative_scan`` over the sequence (parallel on
+TPU), wrapped in the Griffin recurrent block: in-proj → causal conv →
+RG-LRU → gated out-proj.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_param, split_rng
+from repro.sharding import shard_activation
+
+Params = Dict[str, Any]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def rglru_init(rng, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_width
+    rngs = split_rng(rng, 6)
+    params: Params = {}
+    axes: Dict[str, Any] = {}
+    params["wy"], axes["wy"] = dense_param(rngs[0], (d, w), ("fsdp", "lru"))
+    params["wgate"], axes["wgate"] = dense_param(rngs[1], (d, w), ("fsdp", "lru"))
+    params["conv"], axes["conv"] = dense_param(
+        rngs[2], (cfg.lru_conv, w), (None, "lru"), scale=1.0 / math.sqrt(cfg.lru_conv))
+    params["w_r"], axes["w_r"] = dense_param(rngs[3], (w, w), (None, "lru"))
+    params["w_i"], axes["w_i"] = dense_param(rngs[4], (w, w), (None, "lru"))
+    params["wo"], axes["wo"] = dense_param(
+        rngs[5], (w, d), ("lru", "fsdp"), scale=1.0 / math.sqrt(w))
+    # Λ init so a^(1/r) spans ~[0.9, 0.999]
+    u = jnp.linspace(0.9, 0.999, w).astype(jnp.float32)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    params["lambda"] = lam
+    axes["lambda"] = ("lru",)
+    params["b_r"] = jnp.zeros((w,), jnp.float32)
+    axes["b_r"] = ("lru",)
+    params["b_i"] = jnp.zeros((w,), jnp.float32)
+    axes["b_i"] = ("lru",)
+    return params, axes
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + w[i] * pad[:, i:i + x.shape[1]]
+    return out
+
+
+def _gates(p: Params, u: jax.Array):
+    """Returns (log_a, gated_input) both (B,S,W) fp32."""
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(u32 @ p["w_r"].astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid(u32 @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r          # <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12))
+    return log_a, beta * i * u32
+
+
+def apply_rglru(cfg: ModelConfig, p: Params, x: jax.Array,
+                use_kernel: bool = False) -> jax.Array:
+    """Full-sequence Griffin recurrent block.  x: (B,S,D)."""
+    dtype = x.dtype
+    y = x @ p["wy"].astype(dtype)
+    gate = x @ p["wgate"].astype(dtype)
+    u = _causal_conv(y, p["conv"].astype(dtype))
+    u = shard_activation(u, "batch", "seq", "lru")
+    log_a, b = _gates(p, u)
+
+    if use_kernel:
+        from repro.kernels import ops
+        w = log_a.shape[-1]
+        bw = 512
+        while w % bw:
+            bw //= 2
+        h = ops.rg_lru_scan(log_a, b, chunk=min(128, log_a.shape[1]),
+                            block_w=max(bw, 1))
+    else:
+        # associative scan: h_t = a_t h_{t-1} + b_t == compose (a,b) pairs
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+
+        a_seq = jnp.exp(log_a)
+        _, h = jax.lax.associative_scan(combine, (a_seq, b), axis=1)
+    h = h.astype(dtype)
+    out = (h * jax.nn.gelu(gate)) @ p["wo"].astype(dtype)
+    return out
+
+
+def prefill_rglru(cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+                  ) -> Tuple[jax.Array, Params]:
+    """Full-sequence pass that also produces the decode state."""
+    dtype = x.dtype
+    y = x @ p["wy"].astype(dtype)
+    gate = x @ p["wgate"].astype(dtype)
+    u = _causal_conv(y, p["conv"].astype(dtype))
+    u = shard_activation(u, "batch", "seq", "lru")
+    log_a, b = _gates(p, u)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_seq = jnp.exp(log_a)
+    _, h = jax.lax.associative_scan(combine, (a_seq, b), axis=1)
+    out = (h.astype(dtype) * jax.nn.gelu(gate)) @ p["wo"].astype(dtype)
+    k = cfg.lru_conv
+    new_cache = {
+        "h": h[:, -1].astype(jnp.float32),
+        "conv": y[:, -(k - 1):].astype(cache["conv"].dtype),
+    }
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    w, k = cfg.lru_width, cfg.lru_conv
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, k - 1, w), dtype),
+    }
+
+
+def rglru_cache_axes() -> Dict[str, Tuple]:
+    return {"h": ("batch", "lru"), "conv": ("batch", None, "lru")}
+
+
+def decode_rglru(cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+                 ) -> Tuple[jax.Array, Params]:
+    """One-token step.  x: (B,1,D)."""
+    dtype = x.dtype
+    y = x @ p["wy"].astype(dtype)                       # (B,1,W)
+    gate = x @ p["wgate"].astype(dtype)
+    full = jnp.concatenate([cache["conv"], y], axis=1)  # (B,k,W)
+    u = jnp.einsum("bkc,kc->bc", full, p["conv"].astype(dtype))[:, None]  # (B,1,W)
+    log_a, b = _gates(p, u)
+    h = jnp.exp(log_a[:, 0]) * cache["h"] + b[:, 0]     # (B,W) fp32
+    out = (h[:, None].astype(dtype) * jax.nn.gelu(gate)) @ p["wo"].astype(dtype)
+    return out, {"h": h, "conv": full[:, 1:]}

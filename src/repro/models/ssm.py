@@ -1,0 +1,242 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the *chunked* SSD algorithm: intra-chunk attention-like
+dense matmuls (MXU-friendly) + an inter-chunk state recurrence (lax.scan over
+chunks).  Decode carries the (B, H, N, P) state and a conv ring.
+
+All decays are exp of non-positive numbers (A < 0), so fp32 math is stable
+without rescaling.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_param, split_rng
+from repro.sharding import shard_activation
+
+Params = Dict[str, Any]
+
+
+def ssm_init(rng, cfg: ModelConfig):
+    d, di, st, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    rngs = split_rng(rng, 8)
+    params: Params = {}
+    axes: Dict[str, Any] = {}
+    params["wz"], axes["wz"] = dense_param(rngs[0], (d, di), ("fsdp", "ssm_inner"))
+    params["wx"], axes["wx"] = dense_param(rngs[1], (d, di), ("fsdp", "ssm_inner"))
+    params["wB"], axes["wB"] = dense_param(rngs[2], (d, st), ("fsdp", None))
+    params["wC"], axes["wC"] = dense_param(rngs[3], (d, st), ("fsdp", None))
+    params["wdt"], axes["wdt"] = dense_param(rngs[4], (d, nh), ("fsdp", "ssm_heads"))
+    params["wo"], axes["wo"] = dense_param(
+        rngs[5], (di, d), ("ssm_inner", "fsdp"), scale=1.0 / math.sqrt(di))
+    params["conv_x"], axes["conv_x"] = dense_param(
+        rngs[6], (cfg.ssm_conv, di), (None, "ssm_inner"), scale=1.0 / math.sqrt(cfg.ssm_conv))
+    params["conv_BC"], axes["conv_BC"] = dense_param(
+        rngs[7], (cfg.ssm_conv, 2 * st), (None, None), scale=1.0 / math.sqrt(cfg.ssm_conv))
+    # A_log init so that -exp(A_log) in [-1, ...): standard mamba2 init A in [1,16]
+    params["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32))
+    axes["A_log"] = ("ssm_heads",)
+    params["D"] = jnp.ones((nh,), jnp.float32)
+    axes["D"] = ("ssm_heads",)
+    params["dt_bias"] = jnp.zeros((nh,), jnp.float32)
+    axes["dt_bias"] = ("ssm_heads",)
+    params["norm_scale"] = jnp.ones((di,), jnp.float32)
+    axes["norm_scale"] = ("ssm_inner",)
+    return params, axes
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B,S,C), w: (k,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + w[i] * pad[:, i:i + x.shape[1]]
+    return out
+
+
+def _gated_norm(p: Params, y: jax.Array, z: jax.Array, eps=1e-6) -> jax.Array:
+    """Mamba2 RMSNorm-gated output: norm(y) * silu(z)."""
+    y32 = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    n = (y32 * jax.lax.rsqrt(ms + eps) * p["norm_scale"]).astype(y.dtype)
+    return n * jax.nn.silu(z)
+
+
+def _project(cfg: ModelConfig, p: Params, x: jax.Array):
+    dtype = x.dtype
+    z = x @ p["wz"].astype(dtype)
+    xin = x @ p["wx"].astype(dtype)
+    bc = jnp.concatenate([x @ p["wB"].astype(dtype), x @ p["wC"].astype(dtype)], -1)
+    dt_raw = x @ p["wdt"].astype(dtype)
+    return z, xin, bc, dt_raw
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B_: jax.Array,
+                C_: jax.Array, chunk: int):
+    """The SSD algorithm.
+
+    x: (B,S,H,P) head inputs; dt: (B,S,H) positive step sizes; A: (H,) < 0;
+    B_, C_: (B,S,N) shared across heads (n_groups=1).  Returns y: (B,S,H,P)
+    and the final state (B,H,N,P).
+    """
+    b, s, h, pdim = x.shape
+    n = B_.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xr = x.reshape(b, nc, q, h, pdim)
+    dtr = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    br = B_.reshape(b, nc, q, n)
+    cr = C_.reshape(b, nc, q, n)
+    dA = dtr * A  # (B,nc,Q,H), <= 0
+    cum = jnp.cumsum(dA, axis=2)          # (B,nc,Q,H)
+    cum_end = cum[:, :, -1]               # (B,nc,H)
+
+    # ---- intra-chunk (attention-like dense path) ----
+    # L_ij = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: upper-triangle diffs are positive and overflow, and
+    # inf * 0 in the backward pass would poison every gradient.
+    L = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", cr, br).astype(jnp.float32)  # (B,nc,Qi,Qj)
+    att = cb[..., None] * L * dtr[:, :, None, :, :]                 # (B,nc,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att.astype(x.dtype), xr)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(cum_end[:, :, None, :] - cum)            # (B,nc,Q,H)
+    sbx = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                     br, (decay_to_end * dtr).astype(x.dtype), xr)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(cum_end)  # (B,nc,H)
+
+    def step(state, inp):
+        dec, snew = inp            # (B,H), (B,H,N,P)
+        state = state * dec[..., None, None].astype(state.dtype) + snew
+        return state, state
+
+    s0 = jnp.zeros((b, h, n, pdim), x.dtype)
+    final, states = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2).astype(x.dtype),
+                   sbx.transpose(1, 0, 2, 3, 4)))
+    states = states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P) = state AFTER chunk c
+    prev = jnp.concatenate([jnp.zeros_like(states[:, :1]), states[:, :-1]], 1)
+
+    # y_inter_i = exp(cum_i) * C_i · prev_state
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp", cr, prev) * jnp.exp(cum)[
+        ..., None].astype(x.dtype)
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    return y, final
+
+
+def _ssm_full(cfg: ModelConfig, p: Params, x: jax.Array,
+              use_kernel: bool = False):
+    b, s, _ = x.shape
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xin_raw, bc_raw, dt_raw = _project(cfg, p, x)
+    xin = jax.nn.silu(_causal_conv(xin_raw, p["conv_x"].astype(x.dtype)))
+    bc = jax.nn.silu(_causal_conv(bc_raw, p["conv_BC"].astype(x.dtype)))
+    B_, C_ = bc[..., :st], bc[..., st:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    # head-shard dt as well: the SSD intra-chunk (B,nc,Q,Q,H) tensors
+    # inherit their sharding from dt/x — without this they replicate over
+    # the model axis and blow past HBM at train shapes.
+    dt = shard_activation(dt, "batch", "seq", "ssm_heads")
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(b, s, nh, hd)
+    xh = shard_activation(xh, "batch", "seq", "ssm_heads", None)
+    if use_kernel:
+        from repro.kernels import ops
+        block_h = max(1, min(8, nh))
+        while nh % block_h:
+            block_h -= 1
+        y = ops.ssd_scan(xh, dt, A, B_, C_,
+                         chunk=min(cfg.ssm_chunk, 128), block_h=block_h)
+        final = None
+    else:
+        y, final = ssd_chunked(xh, dt, A, B_, C_, cfg.ssm_chunk)
+    y = y + p["D"].astype(x.dtype)[:, None] * xh
+    y = y.reshape(b, s, di)
+    out = _gated_norm(p, y, z) @ p["wo"].astype(x.dtype)
+    return out, final, xin_raw, bc_raw
+
+
+def apply_ssm(cfg: ModelConfig, p: Params, x: jax.Array,
+              use_kernel: bool = False) -> jax.Array:
+    """Full-sequence Mamba2 block.  x: (B,S,D)."""
+    out, _, _, _ = _ssm_full(cfg, p, x, use_kernel=use_kernel)
+    return out
+
+
+def prefill_ssm(cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+                ) -> Tuple[jax.Array, Params]:
+    out, final, xin_raw, bc_raw = _ssm_full(cfg, p, x)
+    k = cfg.ssm_conv
+    new_cache = {
+        "state": final.astype(cache["state"].dtype),
+        "conv_x": xin_raw[:, -(k - 1):].astype(cache["conv_x"].dtype),
+        "conv_BC": bc_raw[:, -(k - 1):].astype(cache["conv_BC"].dtype),
+    }
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    k = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((batch, nh, st, hd), dtype),
+        "conv_x": jnp.zeros((batch, k - 1, di), dtype),
+        "conv_BC": jnp.zeros((batch, k - 1, 2 * st), dtype),
+    }
+
+
+def ssm_cache_axes() -> Dict[str, Tuple]:
+    return {
+        "state": ("batch", "ssm_heads", None, None),
+        "conv_x": ("batch", None, "ssm_inner"),
+        "conv_BC": ("batch", None, None),
+    }
+
+
+def decode_ssm(cfg: ModelConfig, p: Params, x: jax.Array, cache: Params
+               ) -> Tuple[jax.Array, Params]:
+    """One-token step.  x: (B,1,D)."""
+    b = x.shape[0]
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xin, bc, dt_raw = _project(cfg, p, x)
+    # conv over ring
+    full_x = jnp.concatenate([cache["conv_x"], xin], axis=1)      # (B,k,di)
+    full_bc = jnp.concatenate([cache["conv_BC"], bc], axis=1)
+    xin1 = jax.nn.silu(jnp.einsum("bkc,kc->bc", full_x, p["conv_x"].astype(x.dtype)))
+    bc1 = jax.nn.silu(jnp.einsum("bkc,kc->bc", full_bc, p["conv_BC"].astype(x.dtype)))
+    B_, C_ = bc1[..., :st], bc1[..., st:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A).astype(x.dtype)                           # (B,nh)
+    xh = xin1.reshape(b, nh, hd)
+    state = cache["state"] * dA[..., None, None] + (
+        dt.astype(x.dtype)[..., None, None]
+        * B_[:, None, :, None] * xh[:, :, None, :])                # (B,nh,st,hd)
+    y = jnp.einsum("bn,bhnp->bhp", C_, state) + p["D"].astype(x.dtype)[:, None] * xh
+    y = y.reshape(b, 1, di)
+    out = _gated_norm(p, y, z) @ p["wo"].astype(x.dtype)
+    new_cache = {
+        "state": state,
+        "conv_x": full_x[:, 1:],
+        "conv_BC": full_bc[:, 1:],
+    }
+    return out, new_cache

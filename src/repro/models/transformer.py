@@ -1,0 +1,709 @@
+"""The composable decoder: assembles any assigned architecture from its
+``ModelConfig`` layer specs.
+
+Layers are grouped into repeating *super-blocks* of length ``cfg.period``
+(1 for homogeneous stacks, 6 for gemma3's 5:1 local:global, 3 for
+recurrentgemma's rec-rec-attn).  The ``n_full`` repeats are stacked on a
+leading axis and executed with ``lax.scan`` (fast compiles at 40-80 layers);
+the remainder layers run unrolled.  The WSSL split cut slices the stacked
+leading axis — client stage = embedding + first ``cut//period`` super-blocks.
+
+Param trees carry a parallel *logical axes* tree (see repro.sharding).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ATTN_GLOBAL, ATTN_LOCAL, MIX_RGLRU, MIX_SSM,
+                          MLP_DENSE, MLP_MOE, MLP_NONE, LayerSpec, ModelConfig)
+from repro.models import attention as attn
+from repro.models import frontend as fe
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_mlp, apply_norm, dense_param,
+                                 mlp_init, norm_init, softcap, split_rng,
+                                 text_positions)
+from repro.sharding import shard_activation
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(rng, cfg: ModelConfig, spec: LayerSpec):
+    rngs = split_rng(rng, 4)
+    params: Params = {}
+    axes: Dict[str, Any] = {}
+    params["norm1"], axes["norm1"] = norm_init(cfg)
+    if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        params["mixer"], axes["mixer"] = attn.attention_init(rngs[0], cfg)
+    elif spec.mixer == MIX_SSM:
+        params["mixer"], axes["mixer"] = ssm_mod.ssm_init(rngs[0], cfg)
+    elif spec.mixer == MIX_RGLRU:
+        params["mixer"], axes["mixer"] = rglru_mod.rglru_init(rngs[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.mlp != MLP_NONE:
+        params["norm2"], axes["norm2"] = norm_init(cfg)
+        if spec.mlp == MLP_DENSE:
+            params["mlp"], axes["mlp"] = mlp_init(rngs[1], cfg)
+        else:
+            params["mlp"], axes["mlp"] = moe_mod.moe_init(rngs[1], cfg)
+    return params, axes
+
+
+def _resolve_span(n_full: int, requested: int) -> int:
+    """Largest divisor of n_full not exceeding the requested remat span."""
+    span = max(min(requested, n_full), 1)
+    while n_full % span:
+        span -= 1
+    return span
+
+
+def _superblock_layout(cfg: ModelConfig) -> Tuple[List[LayerSpec], int, int]:
+    """Returns (period specs, n_full, n_rem)."""
+    specs = cfg.layer_specs()
+    p = cfg.period
+    n_full = cfg.num_layers // p
+    n_rem = cfg.num_layers - n_full * p
+    return specs[:p], n_full, n_rem
+
+
+def init_params(rng, cfg: ModelConfig) -> Tuple[Params, Dict[str, Any]]:
+    period_specs, n_full, n_rem = _superblock_layout(cfg)
+    rngs = split_rng(rng, 5)
+    params: Params = {}
+    axes: Dict[str, Any] = {}
+
+    # 1/sqrt(d) embedding init keeps tied-unembedding logits O(1) at init
+    # (embed_scale archs multiply sqrt(d) back on the input side).
+    emb, emb_ax = dense_param(rngs[0], (cfg.vocab_size, cfg.d_model),
+                              ("vocab", "fsdp"),
+                              scale=cfg.d_model ** -0.5)
+    params["embed"] = {"tok": emb}
+    axes["embed"] = {"tok": emb_ax}
+
+    fp, fax = fe.frontend_init(rngs[1], cfg)
+    if fp:
+        params["frontend"], axes["frontend"] = fp, fax
+
+    # stacked super-blocks: list (len=period) of trees with leading n_full
+    stack: List[Params] = []
+    stack_axes: List[Dict[str, Any]] = []
+    layer_rngs = split_rng(rngs[2], max(n_full, 1) * len(period_specs))
+    for j, spec in enumerate(period_specs):
+        per_layer = []
+        ax_j = None
+        for r in range(n_full):
+            lp, ax_j = _layer_init(layer_rngs[r * len(period_specs) + j], cfg, spec)
+            per_layer.append(lp)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+        stack.append(stacked)
+        # leading scan axis is unsharded -> prepend None to every axes tuple
+        stack_axes.append(jax.tree.map(lambda a: (None,) + tuple(a), ax_j,
+                                       is_leaf=_is_axes_leaf))
+    params["stack"] = stack
+    axes["stack"] = stack_axes
+
+    rem: List[Params] = []
+    rem_axes: List[Dict[str, Any]] = []
+    rem_rngs = split_rng(rngs[3], max(n_rem, 1))
+    all_specs = cfg.layer_specs()
+    for i in range(n_rem):
+        spec = all_specs[n_full * len(period_specs) + i]
+        lp, lax_ = _layer_init(rem_rngs[i], cfg, spec)
+        rem.append(lp)
+        rem_axes.append(lax_)
+    params["rem"] = rem
+    axes["rem"] = rem_axes
+
+    params["final_norm"], axes["final_norm"] = norm_init(cfg)
+    if not cfg.tie_embeddings:
+        params["head"], axes["head"] = dense_param(
+            rngs[4], (cfg.d_model, cfg.vocab_size), ("fsdp", "vocab"),
+            scale=1.0 / (cfg.d_model ** 0.5))
+    return params, axes
+
+
+def _is_axes_leaf(a):
+    return isinstance(a, tuple) and all(
+        isinstance(e, (str, type(None), tuple)) for e in a)
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct params tree, logical axes tree) without allocation.
+
+    The axes tree is built eagerly during the abstract trace (it is plain
+    Python data), while param shapes come from eval_shape.
+    """
+    cell: Dict[str, Any] = {}
+
+    def f(r):
+        p, axes = init_params(r, cfg)
+        cell["axes"] = axes
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, cell["axes"]
+
+
+def param_axes_tree(cfg: ModelConfig):
+    """Axes tree without materializing params."""
+    return abstract_params(cfg)[1]
+
+
+# ---------------------------------------------------------------------------
+# Forward (full sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
+                 positions: jax.Array, impl: str) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm1"], x)
+    if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        mixed = attn.multihead_attention(cfg, p["mixer"], h, positions,
+                                         window=spec.window, impl=impl)
+    elif spec.mixer == MIX_SSM:
+        mixed = ssm_mod.apply_ssm(cfg, p["mixer"], h,
+                                  use_kernel=(impl == "pallas"))
+    else:
+        mixed = rglru_mod.apply_rglru(cfg, p["mixer"], h,
+                                      use_kernel=(impl == "pallas"))
+    x = x + mixed
+    if spec.mlp != MLP_NONE:
+        h = apply_norm(cfg, p["norm2"], x)
+        if spec.mlp == MLP_DENSE:
+            x = x + apply_mlp(cfg, p["mlp"], h)
+        else:
+            y, aux_l = moe_mod.apply_moe(cfg, p["mlp"], h)
+            x = x + y
+            aux = aux + aux_l
+    x = shard_activation(x, "batch", "seq", None)
+    return x, aux
+
+
+def _embed(cfg: ModelConfig, params: Params, tokens: jax.Array,
+           embeds: Optional[jax.Array]) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"]["tok"].astype(dtype)[tokens]
+    if cfg.frontend == "vision" and embeds is not None:
+        x = fe.splice_frontend(cfg, params.get("frontend", {}), x,
+                               embeds.astype(dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    return shard_activation(x, "batch", "seq", None)
+
+
+def _unembed(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tok"].astype(dtype))
+    else:
+        logits = x @ params["head"].astype(dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return shard_activation(logits, "batch", "seq", "vocab")
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None,
+            impl: Optional[str] = None,
+            remat: bool = True,
+            remat_span: int = 1,
+            last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits, aux_loss).
+
+    ``last_only`` unembeds only the final position (serving prefill — the
+    full (B,S,V) logits tensor must never materialize at 32k×256k)."""
+    impl = impl or getattr(cfg, "attn_impl", "chunked")
+    x = _embed(cfg, params, tokens, embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        if cfg.frontend == "vision" and embeds is not None:
+            positions = fe.build_positions(cfg, b, tokens.shape[1], embeds.shape[1])
+        else:
+            positions = text_positions(b, s, cfg)
+    period_specs, n_full, _ = _superblock_layout(cfg)
+
+    nested = remat and len(period_specs) > 1
+
+    def block(x, block_params):
+        aux = jnp.zeros((), jnp.float32)
+        for j, spec in enumerate(period_specs):
+            layer = functools.partial(_apply_layer, cfg, spec)
+            if nested:
+                layer = jax.checkpoint(layer, static_argnums=(3,))
+            x, a = layer(block_params[j], x, positions, impl)
+            aux = aux + a
+        return x, aux
+
+    if n_full > 0:
+        span = _resolve_span(n_full, remat_span if remat else 1)
+
+        def span_block(x, span_params):
+            aux = jnp.zeros((), jnp.float32)
+            for t in range(span):
+                bp = jax.tree.map(lambda a: a[t], span_params)
+                xb, a = block(x, bp)
+                x, aux = xb, aux + a
+            return x, aux
+
+        body = jax.checkpoint(span_block) if remat else span_block
+        stack = (jax.tree.map(
+            lambda a: a.reshape((n_full // span, span) + a.shape[1:]),
+            params["stack"]) if span > 1 else params["stack"])
+        if span == 1:
+            stack = jax.tree.map(lambda a: a[:, None], params["stack"])
+
+        def scan_body(carry, bp):
+            x, aux = carry
+            x, a = body(x, bp)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                                   stack)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+
+    all_specs = cfg.layer_specs()
+    for i, lp in enumerate(params["rem"]):
+        spec = all_specs[n_full * len(period_specs) + i]
+        x, a = _apply_layer(cfg, spec, lp, x, positions, impl)
+        aux = aux + a
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]
+    return _unembed(cfg, params, x), aux
+
+
+# ---------------------------------------------------------------------------
+# WSSL stage split (client = embed + first cut//period super-blocks)
+# ---------------------------------------------------------------------------
+
+
+def split_params(params: Params, cfg: ModelConfig, cut: int
+                 ) -> Tuple[Params, Params]:
+    """Split a param tree at layer ``cut`` (must be a super-block boundary)."""
+    period = cfg.period
+    assert cut % period == 0, f"cut {cut} must align to super-block ({period})"
+    cb = cut // period
+    client = {
+        "embed": params["embed"],
+        "stack": jax.tree.map(lambda a: a[:cb], params["stack"]),
+    }
+    if "frontend" in params:
+        client["frontend"] = params["frontend"]
+    server = {
+        "stack": jax.tree.map(lambda a: a[cb:], params["stack"]),
+        "rem": params["rem"],
+        "final_norm": params["final_norm"],
+    }
+    if cfg.tie_embeddings:
+        # tied unembedding lives on the server: keep a server-side copy of
+        # the embedding matrix (the paper's server owns the output head).
+        server["embed"] = params["embed"]
+    elif "head" in params:
+        server["head"] = params["head"]
+    return client, server
+
+
+def split_axes(axes: Dict[str, Any], cfg: ModelConfig, cut: int):
+    """The logical-axes trees matching :func:`split_params`."""
+    client = {"embed": axes["embed"], "stack": axes["stack"]}
+    if "frontend" in axes:
+        client["frontend"] = axes["frontend"]
+    server = {"stack": axes["stack"], "rem": axes["rem"],
+              "final_norm": axes["final_norm"]}
+    if cfg.tie_embeddings:
+        server["embed"] = axes["embed"]
+    elif "head" in axes:
+        server["head"] = axes["head"]
+    return client, server
+
+
+def join_params(client: Params, server: Params, cfg: ModelConfig) -> Params:
+    joined = {
+        "embed": client["embed"],
+        "stack": jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                              client["stack"], server["stack"]),
+        "rem": server["rem"],
+        "final_norm": server["final_norm"],
+    }
+    if "frontend" in client:
+        joined["frontend"] = client["frontend"]
+    if "head" in server:
+        joined["head"] = server["head"]
+    return joined
+
+
+def client_forward(client_params: Params, cfg: ModelConfig,
+                   tokens: jax.Array, *,
+                   embeds: Optional[jax.Array] = None,
+                   positions: Optional[jax.Array] = None,
+                   impl: str = "chunked", remat: bool = True,
+                   remat_span: int = 1) -> jax.Array:
+    """Client stage: embedding + the client's super-blocks → cut activation."""
+    x = _embed(cfg, client_params, tokens, embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        if cfg.frontend == "vision" and embeds is not None:
+            positions = fe.build_positions(cfg, b, tokens.shape[1],
+                                           embeds.shape[1])
+        else:
+            positions = text_positions(b, s, cfg)
+    period_specs, _, _ = _superblock_layout(cfg)
+
+    nested = remat and len(period_specs) > 1
+
+    def block(x, bp):
+        for j, spec in enumerate(period_specs):
+            layer = functools.partial(_apply_layer, cfg, spec)
+            if nested:
+                layer = jax.checkpoint(layer, static_argnums=(3,))
+            x, _ = layer(bp[j], x, positions, impl)
+        return x
+
+    n_full = jax.tree.leaves(client_params["stack"])[0].shape[0]
+    span = _resolve_span(n_full, remat_span if remat else 1)
+
+    def span_block(x, sp_):
+        for t in range(span):
+            x = block(x, jax.tree.map(lambda a: a[t], sp_))
+        return x, None
+
+    body = jax.checkpoint(span_block) if remat else span_block
+    stack = jax.tree.map(
+        lambda a: a.reshape((max(n_full // span, 0), span) + a.shape[1:]),
+        client_params["stack"])
+    x, _ = jax.lax.scan(body, x, stack)
+    return x
+
+
+def server_hidden(server_params: Params, cfg: ModelConfig,
+                  activation: jax.Array, *,
+                  positions: Optional[jax.Array] = None,
+                  impl: str = "chunked",
+                  remat: bool = True,
+                  remat_span: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """Server stage up to the final norm (pre-unembed).  Returns (x, aux)."""
+    x = activation
+    b, s, _ = x.shape
+    if positions is None:
+        positions = text_positions(b, s, cfg)
+    period_specs, _, _ = _superblock_layout(cfg)
+
+    nested = remat and len(period_specs) > 1
+
+    def block(carry, bp):
+        x, aux = carry
+        for j, spec in enumerate(period_specs):
+            layer = functools.partial(_apply_layer, cfg, spec)
+            if nested:
+                layer = jax.checkpoint(layer, static_argnums=(3,))
+            x, a = layer(bp[j], x, positions, impl)
+            aux = aux + a
+        return (x, aux)
+
+    n_full = jax.tree.leaves(server_params["stack"])[0].shape[0]
+    span = _resolve_span(n_full, remat_span if remat else 1)
+
+    def span_block(carry, sp_):
+        for t in range(span):
+            carry = block(carry, jax.tree.map(lambda a: a[t], sp_))
+        return carry, None
+
+    body = jax.checkpoint(span_block) if remat else span_block
+    stack = jax.tree.map(
+        lambda a: a.reshape((max(n_full // span, 0), span) + a.shape[1:]),
+        server_params["stack"])
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stack)
+    n_server_rem_start = cfg.num_layers - len(server_params["rem"])
+    all_specs = cfg.layer_specs()
+    for i, lp in enumerate(server_params["rem"]):
+        spec = all_specs[n_server_rem_start + i]
+        x, a = _apply_layer(cfg, spec, lp, x, positions, impl)
+        aux = aux + a
+    x = apply_norm(cfg, server_params["final_norm"], x)
+    return x, aux
+
+
+def server_forward(server_params: Params, cfg: ModelConfig,
+                   activation: jax.Array, *,
+                   positions: Optional[jax.Array] = None,
+                   impl: str = "chunked",
+                   remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Server stage: remaining super-blocks + head.  Returns (logits, aux)."""
+    x, aux = server_hidden(server_params, cfg, activation,
+                           positions=positions, impl=impl, remat=remat)
+    return _unembed(cfg, server_params, x), aux
+
+
+def server_loss(server_params: Params, cfg: ModelConfig,
+                activation: jax.Array, labels: jax.Array, *,
+                impl: str = "chunked", remat: bool = True,
+                remat_span: int = 1,
+                xent_chunk: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """Server stage + memory-bounded chunked cross-entropy."""
+    x, aux = server_hidden(server_params, cfg, activation, impl=impl,
+                           remat=remat, remat_span=remat_span)
+    return chunked_xent(server_params, cfg, x, labels, chunk=xent_chunk), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(params: Params, cfg: ModelConfig, x: jax.Array,
+                 labels: jax.Array, chunk: int = 512) -> jax.Array:
+    """Cross-entropy over the vocab without materializing (B,S,V) logits.
+
+    Scans over sequence chunks; each step computes one (B,c,V) logits tile
+    and reduces it to per-token NLL.  The scan body is rematerialized so the
+    backward pass recomputes tiles instead of storing them — peak logits
+    memory drops from O(S·V) to O(c·V).
+    """
+    b, s, d = x.shape
+    if labels.shape[1] != s:          # vision prefix present: trim activations
+        x = x[:, -labels.shape[1]:]
+        s = labels.shape[1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    yc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(tot, inp):
+        xi, yi = inp
+        logits = _unembed(cfg, params, xi)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yi[..., None], axis=-1)[..., 0]
+        return tot + (lse - gold).sum(), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc))
+    return tot / (b * s)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy in fp32.  logits: (B,S,V), labels: (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            *, impl: Optional[str] = None, remat: bool = True) -> jax.Array:
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          embeds=batch.get("embeds"), impl=impl, remat=remat)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:   # vision prefix present
+        logits = logits[:, -labels.shape[1]:]
+    return cross_entropy(logits, labels, batch.get("mask")) + aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill + decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_init(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                      max_len: int, dtype,
+                      decode_window_override: Optional[int]) -> Params:
+    if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        window = spec.window
+        if spec.mixer == ATTN_GLOBAL and decode_window_override:
+            window = decode_window_override
+        return attn.init_kv_cache(cfg, batch, max_len, window, dtype)
+    if spec.mixer == MIX_SSM:
+        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    return rglru_mod.init_rglru_cache(cfg, batch, dtype)
+
+
+def _layer_cache_axes(spec: LayerSpec):
+    if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        return attn.kv_cache_axes(spec.window)
+    if spec.mixer == MIX_SSM:
+        return ssm_mod.ssm_cache_axes()
+    return rglru_mod.rglru_cache_axes()
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               decode_window_override: Optional[int] = None) -> Params:
+    """Cache pytree matching the stack/rem layout."""
+    dtype = jnp.dtype(cfg.dtype)
+    period_specs, n_full, n_rem = _superblock_layout(cfg)
+    stack = []
+    for spec in period_specs:
+        one = _layer_cache_init(cfg, spec, batch, max_len, dtype,
+                                decode_window_override)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_full,) + a.shape), one)
+        stack.append(stacked)
+    all_specs = cfg.layer_specs()
+    rem = [_layer_cache_init(cfg, all_specs[n_full * len(period_specs) + i],
+                             batch, max_len, dtype, decode_window_override)
+           for i in range(n_rem)]
+    return {"stack": stack, "rem": rem}
+
+
+def cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    period_specs, n_full, n_rem = _superblock_layout(cfg)
+    stack = []
+    for spec in period_specs:
+        ax = _layer_cache_axes(spec)
+        stack.append(jax.tree.map(lambda a: (None,) + tuple(a), ax,
+                                  is_leaf=_is_axes_leaf))
+    all_specs = cfg.layer_specs()
+    rem = [_layer_cache_axes(all_specs[n_full * len(period_specs) + i])
+           for i in range(n_rem)]
+    return {"stack": stack, "rem": rem}
+
+
+def _decode_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
+                  cache: Params, pos: jax.Array,
+                  decode_window_override: Optional[int]) -> Tuple[jax.Array, Params]:
+    h = apply_norm(cfg, p["norm1"], x)
+    if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        window = spec.window
+        if spec.mixer == ATTN_GLOBAL and decode_window_override:
+            window = decode_window_override
+        mixed, cache = attn.decode_attention(cfg, p["mixer"], h, cache, pos,
+                                             window=window)
+    elif spec.mixer == MIX_SSM:
+        mixed, cache = ssm_mod.decode_ssm(cfg, p["mixer"], h, cache)
+    else:
+        mixed, cache = rglru_mod.decode_rglru(cfg, p["mixer"], h, cache)
+    x = x + mixed
+    if spec.mlp != MLP_NONE:
+        h = apply_norm(cfg, p["norm2"], x)
+        if spec.mlp == MLP_DENSE:
+            x = x + apply_mlp(cfg, p["mlp"], h)
+        else:
+            y, _ = moe_mod.apply_moe(cfg, p["mlp"], h)
+            x = x + y
+    return x, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                cache: Params, pos: jax.Array, *,
+                decode_window_override: Optional[int] = None
+                ) -> Tuple[jax.Array, Params]:
+    """One decode step.  tokens: (B, 1) -> (logits (B,1,V), new cache)."""
+    x = _embed(cfg, params, tokens, None)
+    period_specs, n_full, _ = _superblock_layout(cfg)
+
+    def scan_body(x, inp):
+        bp, bc = inp
+        new_c = []
+        for j, spec in enumerate(period_specs):
+            x, cj = _decode_layer(cfg, spec, bp[j], x, bc[j], pos,
+                                  decode_window_override)
+            new_c.append(cj)
+        return x, new_c
+
+    if n_full > 0:
+        x, new_stack = jax.lax.scan(scan_body, x,
+                                    (params["stack"], cache["stack"]))
+    else:
+        new_stack = cache["stack"]
+
+    all_specs = cfg.layer_specs()
+    new_rem = []
+    for i, lp in enumerate(params["rem"]):
+        spec = all_specs[n_full * len(period_specs) + i]
+        x, c = _decode_layer(cfg, spec, lp, x, cache["rem"][i], pos,
+                             decode_window_override)
+        new_rem.append(c)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, {"stack": new_stack, "rem": new_rem}
+
+
+def _prefill_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
+                   cache: Params, positions: jax.Array, impl: str
+                   ) -> Tuple[jax.Array, Params]:
+    h = apply_norm(cfg, p["norm1"], x)
+    if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        mixed, cache = attn.prefill_attention(cfg, p["mixer"], h, positions,
+                                              cache, window=spec.window,
+                                              impl=impl)
+    elif spec.mixer == MIX_SSM:
+        mixed, cache = ssm_mod.prefill_ssm(cfg, p["mixer"], h, cache)
+    else:
+        mixed, cache = rglru_mod.prefill_rglru(cfg, p["mixer"], h, cache)
+    x = x + mixed
+    if spec.mlp != MLP_NONE:
+        h = apply_norm(cfg, p["norm2"], x)
+        if spec.mlp == MLP_DENSE:
+            x = x + apply_mlp(cfg, p["mlp"], h)
+        else:
+            y, _ = moe_mod.apply_moe(cfg, p["mlp"], h)
+            x = x + y
+    x = shard_activation(x, "batch", "seq", None)
+    return x, cache
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            embeds: Optional[jax.Array] = None,
+            cache: Optional[Params] = None,
+            max_len: Optional[int] = None,
+            impl: Optional[str] = None) -> Tuple[jax.Array, Params]:
+    """Full-sequence forward that fills the KV / state caches.
+
+    Returns (full logits, populated cache).  ``max_len`` sizes a fresh cache
+    when ``cache`` is not given (defaults to the prompt length).
+    """
+    impl = impl or "chunked"
+    x = _embed(cfg, params, tokens, embeds)
+    b, s, _ = x.shape
+    if cache is None:
+        cache = init_cache(cfg, b, max_len or s)
+    if cfg.frontend == "vision" and embeds is not None:
+        positions = fe.build_positions(cfg, b, tokens.shape[1], embeds.shape[1])
+    else:
+        positions = text_positions(b, s, cfg)
+    period_specs, n_full, _ = _superblock_layout(cfg)
+
+    def scan_body(x, inp):
+        bp, bc = inp
+        new_c = []
+        for j, spec in enumerate(period_specs):
+            x, cj = _prefill_layer(cfg, spec, bp[j], x, bc[j], positions, impl)
+            new_c.append(cj)
+        return x, new_c
+
+    if n_full > 0:
+        x, new_stack = jax.lax.scan(scan_body, x,
+                                    (params["stack"], cache["stack"]))
+    else:
+        new_stack = cache["stack"]
+
+    all_specs = cfg.layer_specs()
+    new_rem = []
+    for i, lp in enumerate(params["rem"]):
+        spec = all_specs[n_full * len(period_specs) + i]
+        x, c = _prefill_layer(cfg, spec, lp, x, cache["rem"][i], positions, impl)
+        new_rem.append(c)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, {"stack": new_stack, "rem": new_rem}

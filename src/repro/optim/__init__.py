@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, sgd_init,
+                                    sgd_update, make_optimizer, clip_by_global_norm)
+from repro.optim.schedule import make_schedule

@@ -1,0 +1,106 @@
+"""Hand-rolled pytree optimizers (no optax in this environment).
+
+AdamW and SGD+momentum, plus a masked-update mode for WSSL: unselected
+clients must keep params *and* moments frozen for the round (the paper's
+semantics — a client that does not participate does not step).
+
+The mask broadcasts over the leading (client) axis of every leaf.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+class SgdState(NamedTuple):
+    step: jax.Array
+    mom: Params
+
+
+def adamw_init(params: Params) -> AdamState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     m=jax.tree.map(z, params), v=jax.tree.map(z, params))
+
+
+def adamw_update(params: Params, grads: Params, state: AdamState, *,
+                 lr, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.01,
+                 mask: Optional[jax.Array] = None) -> Tuple[Params, AdamState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m_new = beta1 * m + (1 - beta1) * g
+        v_new = beta2 * v + (1 - beta2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        p_new = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+        if mask is not None:
+            mk = mask.reshape((-1,) + (1,) * (p.ndim - 1)).astype(jnp.float32)
+            p_new = mk * p_new + (1 - mk) * p32
+            m_new = mk * m_new + (1 - mk) * m
+            v_new = mk * v_new + (1 - mk) * v
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(step=step, m=new_m, v=new_v)
+
+
+def sgd_init(params: Params) -> SgdState:
+    return SgdState(step=jnp.zeros((), jnp.int32),
+                    mom=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                     params))
+
+
+def sgd_update(params: Params, grads: Params, state: SgdState, *,
+               lr, momentum=0.9, weight_decay=0.0,
+               mask: Optional[jax.Array] = None) -> Tuple[Params, SgdState]:
+    def upd(p, g, m):
+        g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m_new = momentum * m + g
+        p_new = p.astype(jnp.float32) - lr * m_new
+        if mask is not None:
+            mk = mask.reshape((-1,) + (1,) * (p.ndim - 1)).astype(jnp.float32)
+            p_new = mk * p_new + (1 - mk) * p.astype(jnp.float32)
+            m_new = mk * m_new + (1 - mk) * m
+        return p_new.astype(p.dtype), m_new
+
+    out = jax.tree.map(upd, params, grads, state.mom)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, SgdState(step=state.step + 1, mom=new_m)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                         for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def make_optimizer(kind: str):
+    if kind == "adamw":
+        return adamw_init, adamw_update
+    if kind == "sgd":
+        return sgd_init, sgd_update
+    raise ValueError(kind)

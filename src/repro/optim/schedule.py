@@ -1,0 +1,30 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, base_lr: float, warmup_steps: int,
+                  total_steps: int):
+    """Returns schedule(step) -> lr (works on traced int steps)."""
+
+    def warmup(step):
+        return jnp.minimum(1.0, (step + 1) / jnp.maximum(warmup_steps, 1))
+
+    if kind == "constant":
+        def sched(step):
+            return base_lr * warmup(step)
+    elif kind == "linear":
+        def sched(step):
+            frac = jnp.clip((step - warmup_steps)
+                            / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+            return base_lr * warmup(step) * (1.0 - 0.9 * frac)
+    elif kind == "cosine":
+        def sched(step):
+            frac = jnp.clip((step - warmup_steps)
+                            / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+            return base_lr * warmup(step) * (0.1 + 0.45 * (1 + jnp.cos(jnp.pi * frac)))
+    else:
+        raise ValueError(kind)
+    return sched

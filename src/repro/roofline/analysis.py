@@ -1,0 +1,161 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth_per_chip
+  collective = collective_bytes_per_device / ICI_bandwidth_per_chip
+
+``cost_analysis()`` of an SPMD-partitioned executable reports *per-device*
+flops/bytes, so no further division by chip count is needed; the spec's
+"/ (chips × bw)" form is equivalent.  Collective bytes are parsed from the
+partitioned HLO text (cost_analysis does not expose them): we sum result
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, weighting all-reduce 2x (reduce-scatter +
+all-gather under the hood).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI
+per chip (aggregate over links, conservative).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / chip (aggregate, conservative)
+HBM_PER_CHIP = 16 * 2**30  # v5e: 16 GiB
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# "f32[16,128]{1,0} all-gather(" — capture result type + op name
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-category result bytes of every collective in the partitioned HLO."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        out[op] += _shape_bytes(dtype, dims)
+        out["count"] += 1
+    out["weighted_total"] = (2 * out["all-reduce"] + out["all-gather"]
+                             + out["reduce-scatter"] + out["all-to-all"]
+                             + out["collective-permute"])
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_global: float
+    chips: int
+    coll_detail: Dict[str, int] = field(default_factory=dict)
+    memory_per_device: Optional[Dict[str, float]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        """useful MODEL_FLOPS / compiled HLO FLOPs (global)."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU implied by the dominant term."""
+        t_total = max(self.t_compute, self.t_memory, self.t_collective)
+        t_useful = self.model_flops_global / (self.chips * PEAK_FLOPS)
+        return t_useful / max(t_total, 1e-30)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_ratio": self.model_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "coll_detail": self.coll_detail,
+            "memory_per_device": self.memory_per_device,
+        }
+
+
+def model_flops(model_cfg, shape_cfg, wssl_cfg=None) -> float:
+    """Useful FLOPs: 6·N_active·tokens for training, 2·N_active·tokens fwd."""
+    n_active = model_cfg.active_param_count()
+    if shape_cfg.kind == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * n_active * tokens
+    if shape_cfg.kind == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape_cfg.global_batch
+
+
+def summarize_memory(mem_analysis) -> Optional[Dict[str, float]]:
+    if mem_analysis is None:
+        return None
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem_analysis, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        live = (out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+        out["peak_estimate_bytes"] = live
+        out["fits_16GiB"] = bool(live < HBM_PER_CHIP)
+    return out

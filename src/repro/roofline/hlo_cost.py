@@ -1,0 +1,311 @@
+"""Structural cost analysis of optimized (SPMD-partitioned) HLO text.
+
+XLA's built-in ``HloCostAnalysis`` visits every ``while`` body exactly once,
+so any scan-based model (all of ours: layers, attention KV blocks, xent
+chunks) is undercounted by the trip count.  This parser rebuilds the three
+roofline inputs from the HLO text with loop multiplicities applied:
+
+* FLOPs       — from ``dot`` / ``convolution`` ops (2·|out|·contract; the
+                >95% term), inside fusions included.
+* HBM bytes   — per *scheduled* op: result + operand bytes (ops inside
+                fusion bodies are on-chip and skipped) — a post-fusion
+                traffic estimate.
+* collective bytes — result sizes of all-gather / all-reduce (2x) /
+                reduce-scatter / all-to-all / collective-permute.
+
+Loop multiplicities come from the ``backend_config known_trip_count`` that
+XLA attaches to ``while`` ops (fallback: the constant in the loop-condition
+compare, else 1).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# "  %name = TYPE op-name(operands...), attrs"   (also ROOT %name = ...)
+# The TYPE may be a tuple containing /*index=N*/ comments, so we take the
+# first " word(" occurrence after the "=" as the op kind.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r"known_trip_count\D*?(\d+)")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bits(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Total bytes + list of (dtype, dims) found in a (possibly tuple) type."""
+    total = 0
+    shapes = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+        shapes.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return total, shapes
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_bytes: int
+    result_shape: List[int]
+    line: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    params: Dict[str, int] = field(default_factory=dict)  # name -> bytes
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1))
+                if line.strip().startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, kind, rest = m.groups()
+        rbytes, shapes = _shape_bits(type_str)
+        # operand names: %refs inside the parens (first level is fine)
+        operands = _OPERAND_RE.findall(rest.split("metadata=")[0])
+        cur.ops.append(Op(name=name, kind=kind, result_bytes=rbytes,
+                          result_shape=shapes[0][1] if shapes else [],
+                          line=line, operands=operands))
+    return comps, entry
+
+
+def _dot_flops(op: Op, symtab: Dict[str, Tuple[int, List[int]]]) -> float:
+    out_elems = 1
+    for d in op.result_shape:
+        out_elems *= d
+    m = _LHS_CDIMS_RE.search(op.line)
+    contract = 1
+    if m and op.operands:
+        lhs = symtab.get(op.operands[0])
+        if lhs:
+            dims = [int(x) for x in m.group(1).split(",") if x]
+            for di in dims:
+                if di < len(lhs[1]):
+                    contract *= lhs[1][di]
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+
+class HloCost:
+    """Whole-module roofline inputs with while-loop multiplicities."""
+
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_computations(text)
+        # computations that are fusion bodies: internal ops are on-chip
+        self.fusion_bodies = set()
+        for c in self.comps.values():
+            for op in c.ops:
+                if op.kind == "fusion":
+                    m = _CALLS_RE.search(op.line)
+                    if m:
+                        self.fusion_bodies.add(m.group(1))
+        self._memo: Dict[str, CompCost] = {}
+        self._param_eff: Dict[str, Dict[int, float]] = {}
+
+    def _param_effective_bytes(self, body: str) -> Dict[int, float]:
+        """Per-parameter effective read bytes of a fusion body.
+
+        A parameter that is only ever dynamic-sliced inside the fusion is
+        read slice-by-slice, not in full — common for scan xs buffers that
+        XLA fuses the slicing into.  Everything else counts at full size.
+        """
+        if body in self._param_eff:
+            return self._param_eff[body]
+        comp = self.comps.get(body)
+        eff: Dict[int, float] = {}
+        if comp is None:
+            return eff
+        params: Dict[str, Tuple[int, int]] = {}  # name -> (index, bytes)
+        for op in comp.ops:
+            if op.kind == "parameter":
+                m = re.search(r"parameter\((\d+)\)", op.line)
+                if m:
+                    params[op.name] = (int(m.group(1)), op.result_bytes)
+        uses: Dict[str, List[Op]] = {n: [] for n in params}
+        for op in comp.ops:
+            for o in op.operands:
+                if o in uses:
+                    uses[o].append(op)
+        for name, (idx, full) in params.items():
+            us = uses[name]
+            if us and all(u.kind == "dynamic-slice" for u in us):
+                eff[idx] = float(sum(u.result_bytes for u in us))
+            elif us and all(u.kind == "dynamic-update-slice" for u in us):
+                # aliased in-place buffer: traffic is the update slice
+                eff[idx] = 0.0
+            else:
+                eff[idx] = float(full)
+        self._param_eff[body] = eff
+        return eff
+
+    # ------------------------------------------------------------------
+    def comp_cost(self, name: str, _stack=()) -> CompCost:
+        if name in self._memo:
+            return self._memo[name]
+        if name in _stack or name not in self.comps:
+            return CompCost()
+        comp = self.comps[name]
+        symtab: Dict[str, Tuple[int, List[int]]] = {}
+        cost = CompCost(coll={c: 0.0 for c in _COLLECTIVES})
+        fused = name in self.fusion_bodies
+        for op in comp.ops:
+            symtab[op.name] = (op.result_bytes, op.result_shape)
+            kind = op.kind
+            if kind in ("dot", "convolution"):
+                cost.flops += _dot_flops(op, symtab)
+                if not fused:
+                    cost.bytes += op.result_bytes + sum(
+                        symtab.get(o, (0, []))[0] for o in op.operands)
+            elif kind.rstrip("-start") in _COLLECTIVES or kind in _COLLECTIVES:
+                base = kind[:-6] if kind.endswith("-start") else kind
+                if base in _COLLECTIVES:
+                    cost.coll[base] += op.result_bytes
+                    if not fused:
+                        cost.bytes += op.result_bytes
+            elif kind == "while":
+                body = _BODY_RE.search(op.line)
+                cond = _COND_RE.search(op.line)
+                trips = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trips = int(tm.group(1))
+                if body:
+                    sub = self.comp_cost(body.group(1), _stack + (name,))
+                    cost.flops += trips * sub.flops
+                    cost.bytes += trips * sub.bytes
+                    for k, v in sub.coll.items():
+                        cost.coll[k] = cost.coll.get(k, 0.0) + trips * v
+                if cond:
+                    subc = self.comp_cost(cond.group(1), _stack + (name,))
+                    cost.flops += trips * subc.flops
+            elif kind in ("fusion", "call", "custom-call", "conditional",
+                          "reduce", "sort", "scatter", "map"):
+                for cm in _CALL_ATTR_RE.finditer(op.line):
+                    sub = self.comp_cost(cm.group(1), _stack + (name,))
+                    cost.flops += sub.flops
+                    cost.bytes += sub.bytes
+                    for k, v in sub.coll.items():
+                        cost.coll[k] = cost.coll.get(k, 0.0) + v
+                if not fused:
+                    ob = [symtab.get(o, (0, []))[0] for o in op.operands]
+                    cm = _CALLS_RE.search(op.line)
+                    if kind == "fusion" and cm:
+                        eff = self._param_effective_bytes(cm.group(1))
+                        reads = sum(eff.get(i, b) for i, b in enumerate(ob))
+                        if "dynamic-update-slice" in op.name:
+                            # output aliases the big operand; writes are
+                            # slice-sized (already ~counted via reads)
+                            cost.bytes += reads
+                        else:
+                            cost.bytes += op.result_bytes + reads
+                    elif "dynamic-update-slice" in op.name and ob:
+                        cost.bytes += 2.0 * (sum(ob) - max(ob))
+                    else:
+                        cost.bytes += op.result_bytes + sum(ob)
+            elif kind == "dynamic-update-slice":
+                if not fused:
+                    ob = [symtab.get(o, (0, []))[0] for o in op.operands]
+                    if ob:
+                        cost.bytes += 2.0 * (sum(ob) - max(ob))
+            elif kind in ("copy", "copy-start", "dynamic-slice",
+                          "slice", "concatenate",
+                          "broadcast", "transpose", "reshape", "gather",
+                          "reduce-window", "select-and-scatter", "pad",
+                          "iota", "convert", "bitcast-convert"):
+                if not fused and kind not in ("bitcast", "iota"):
+                    cost.bytes += op.result_bytes
+        self._memo[name] = cost
+        return cost
+
+    # ------------------------------------------------------------------
+    def totals(self) -> Dict[str, float]:
+        if self.entry is None:
+            return {"flops": 0.0, "bytes": 0.0, "coll_weighted": 0.0}
+        c = self.comp_cost(self.entry)
+        weighted = (2 * c.coll.get("all-reduce", 0)
+                    + c.coll.get("all-gather", 0)
+                    + c.coll.get("reduce-scatter", 0)
+                    + c.coll.get("all-to-all", 0)
+                    + c.coll.get("collective-permute", 0))
+        out = {"flops": c.flops, "bytes": c.bytes, "coll_weighted": weighted}
+        out.update({f"coll_{k}": v for k, v in c.coll.items()})
+        return out
+
+
+def analyze_text(text: str) -> Dict[str, float]:
+    return HloCost(text).totals()
+
+
+def top_tensors(text: str, n: int = 15) -> List[Tuple[float, str, str]]:
+    """Largest single tensors in the module — the memory-debug view."""
+    comps, _ = parse_computations(text)
+    seen = []
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind in ("parameter", "constant", "get-tuple-element",
+                           "bitcast", "tuple"):
+                continue
+            meta = op.line.split('op_name="')[-1].split('"')[0][:90] \
+                if 'op_name="' in op.line else op.kind
+            seen.append((float(op.result_bytes), op.kind, meta))
+    seen.sort(reverse=True)
+    out, used = [], set()
+    for b, k, m in seen:
+        key = (b, m)
+        if key in used:
+            continue
+        used.add(key)
+        out.append((b, k, m))
+        if len(out) >= n:
+            break
+    return out

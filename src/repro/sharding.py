@@ -1,0 +1,172 @@
+"""Logical-axis sharding: model code annotates activations/params with
+*logical* axis names; launch code binds them to physical mesh axes.
+
+Model code stays mesh-agnostic: ``shard_activation(x, "batch", None, "heads")``
+is a no-op outside a :func:`use_sharding_rules` context and becomes
+``with_sharding_constraint`` inside one.  Axes whose size does not divide the
+bound mesh-axis size are silently dropped (replicated) — this is how e.g.
+kv_heads=8 stays replicated on a model=16 mesh without per-arch special
+cases.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _current() -> Tuple[Optional[Mesh], Dict[str, Logical]]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", {})
+
+
+@contextlib.contextmanager
+def use_sharding_rules(mesh: Mesh, rules: Dict[str, Logical]):
+    """Bind logical axis names to mesh axes for the enclosed trace."""
+    prev = _current()
+    _state.mesh, _state.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _mesh_axis_size(mesh: Mesh, axis: Union[str, Tuple[str, ...]]) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def resolve_spec(mesh: Mesh, rules: Dict[str, Logical], logical_axes: Sequence[Logical],
+                 shape: Optional[Sequence[int]] = None) -> PartitionSpec:
+    """Map logical axis names to a PartitionSpec, dropping non-dividing axes."""
+    entries = []
+    used: set = set()
+    for i, name in enumerate(logical_axes):
+        phys = rules.get(name) if isinstance(name, str) else None
+        if phys is None:
+            entries.append(None)
+            continue
+        # never assign the same physical mesh axis to two tensor dims
+        flat = phys if isinstance(phys, tuple) else (phys,)
+        if any(f in used for f in flat):
+            entries.append(None)
+            continue
+        if shape is not None:
+            size = _mesh_axis_size(mesh, phys)
+            if shape[i] % size != 0:
+                # try a prefix of the (possibly tuple) axis that divides
+                if isinstance(phys, tuple):
+                    pref = []
+                    n = 1
+                    for a in phys:
+                        if shape[i] % (n * mesh.shape[a]) == 0:
+                            pref.append(a)
+                            n *= mesh.shape[a]
+                        else:
+                            break
+                    if pref:
+                        entries.append(tuple(pref))
+                        used.update(pref)
+                        continue
+                entries.append(None)
+                continue
+        entries.append(phys)
+        used.update(flat)
+    # PartitionSpec wants tuples for multi-axis entries
+    return PartitionSpec(*entries)
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The mesh bound by use_sharding_rules (None outside a context)."""
+    return _current()[0]
+
+
+def bound_axes(name: str) -> Tuple[Optional[Logical], int]:
+    """(physical axes bound to a logical name, their total size)."""
+    mesh, rules = _current()
+    if mesh is None:
+        return None, 1
+    phys = rules.get(name)
+    if phys is None:
+        return None, 1
+    flat = phys if isinstance(phys, tuple) else (phys,)
+    size = 1
+    for a in flat:
+        size *= mesh.shape[a]
+    return (flat if len(flat) > 1 else flat[0]), size
+
+
+def shard_activation(x: jax.Array, *logical_axes: Logical) -> jax.Array:
+    """Constrain an activation's sharding (no-op without active rules)."""
+    mesh, rules = _current()
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"shard_activation: {len(logical_axes)} axes for rank-{x.ndim} array"
+        )
+    spec = resolve_spec(mesh, rules, logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding_tree(mesh: Mesh, rules: Dict[str, Logical], axes_tree,
+                        shape_tree) -> object:
+    """Build a pytree of NamedShardings from a logical-axes tree + shapes."""
+    def one(axes, shaped):
+        spec = resolve_spec(mesh, rules, axes, shaped.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda a: isinstance(a, tuple) and all(
+                            isinstance(e, (str, type(None), tuple)) for e in a))
+
+
+# ---------------------------------------------------------------------------
+# Default rule sets (launch code picks / overrides these per shape kind)
+# ---------------------------------------------------------------------------
+
+
+def default_rules(multi_pod: bool = False, *, seq_shard_kv: bool = False,
+                  fsdp: bool = True) -> Dict[str, Logical]:
+    """Baseline logical→physical binding.
+
+    * batch / client   → the data-parallel axes
+    * tensor dims      → 'model'
+    * fsdp             → 'data' (parameter sharding; gathered per layer)
+    * kv_seq           → 'model' (only for decode shapes with tiny batch)
+    """
+    dp: Logical = ("pod", "data") if multi_pod else ("data",)
+    rules: Dict[str, Logical] = {
+        "batch": dp,
+        "client": dp,
+        "heads": "model",
+        "act_heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "expert": "model",
+        "lru": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "fsdp": "data" if fsdp else None,
+        "attn_din": "data" if fsdp else None,
+        "attn_dout": "data" if fsdp else None,
+        "seq": None,
+        "attn_seq": None,
+        "moe_tokens": None,   # bound to the dp axes for prefill/decode only
+        "kv_seq": "model" if seq_shard_kv else None,
+        "embed": None,
+    }
+    return rules

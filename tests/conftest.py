@@ -1,0 +1,16 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real single-device CPU; only the dry-run subprocess uses 512 host devices."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def nprng():
+    return np.random.default_rng(0)

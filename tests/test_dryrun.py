@@ -1,0 +1,52 @@
+"""Multi-pod dry-run integration: runs the real dryrun module in a
+subprocess (it needs 512 placeholder devices, which must never leak into
+this test process).  One cheap arch per step kind; the full 10x4x2 sweep is
+driven by benchmarks/ and recorded in EXPERIMENTS.md."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(args, timeout=480):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("mamba2-370m", "decode_32k"),
+    ("mamba2-370m", "train_4k"),
+])
+def test_dryrun_single_pod(arch, shape, tmp_path):
+    r = _run(["--arch", arch, "--shape", shape, "--out", str(tmp_path)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(tmp_path / f"{arch}_{shape}_16x16.json"))
+    assert rec["chips"] == 256
+    assert rec["flops_per_device"] > 0
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["memory_per_device"]["fits_16GiB"]
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod(tmp_path):
+    r = _run(["--arch", "mamba2-370m", "--shape", "decode_32k",
+              "--multi-pod", "--out", str(tmp_path)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(tmp_path / "mamba2-370m_decode_32k_2x16x16.json"))
+    assert rec["chips"] == 512
+
+
+def test_device_count_not_leaked():
+    """This process must still see exactly one CPU device."""
+    import jax
+    assert len(jax.devices()) == 1

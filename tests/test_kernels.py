@@ -1,0 +1,143 @@
+"""Pallas kernel correctness: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rg_lru import rg_lru_scan
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.wavg import weighted_average_2d
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(scale * RNG.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,hd", [
+    (1, 2, 2, 128, 64),     # MHA
+    (2, 4, 2, 256, 64),     # GQA
+    (1, 8, 1, 128, 128),    # MQA
+    (2, 4, 4, 384, 32),     # non-pow2 seq (3 blocks of 128)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hq, hkv, s, hd, dtype):
+    q = _rand((b, hq, s, hd), dtype)
+    k = _rand((b, hkv, s, hd), dtype)
+    v = _rand((b, hkv, s, hd), dtype)
+    out = flash_attention_bhsd(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128, 256])
+def test_flash_attention_window(window):
+    q = _rand((1, 2, 256, 64))
+    k = _rand((1, 2, 256, 64))
+    v = _rand((1, 2, 256, 64))
+    out = flash_attention_bhsd(q, k, v, causal=True, window=window,
+                               interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-6)
+
+
+def test_flash_attention_softcap():
+    q = _rand((1, 2, 128, 64))
+    k = _rand((1, 2, 128, 64))
+    v = _rand((1, 2, 128, 64))
+    out = flash_attention_bhsd(q, k, v, logit_softcap=30.0, interpret=True)
+    want = ref.flash_attention(q, k, v, logit_softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk,bh", [
+    (1, 128, 4, 32, 16, 64, 4),
+    (2, 256, 8, 64, 32, 128, 4),
+    (1, 64, 2, 16, 8, 32, 2),
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk, bh):
+    x = _rand((b, s, h, p))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.5, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 4.0, size=(h,)), jnp.float32)
+    b_ = _rand((b, s, n))
+    c_ = _rand((b, s, n))
+    out = ssd_scan(x, dt, a, b_, c_, chunk=chunk, block_h=bh, interpret=True)
+    want = ref.ssd_scan(x, dt, a, b_, c_)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_ssd_scan_bf16():
+    b, s, h, p, n = 1, 128, 4, 32, 16
+    x = _rand((b, s, h, p), jnp.bfloat16)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.5, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 4.0, size=(h,)), jnp.float32)
+    b_ = _rand((b, s, n), jnp.bfloat16)
+    c_ = _rand((b, s, n), jnp.bfloat16)
+    out = ssd_scan(x, dt, a, b_, c_, chunk=64, block_h=4, interpret=True)
+    want = ref.ssd_scan(x, dt, a, b_, c_)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=0.15,
+                               rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,w,chunk,bw", [
+    (1, 128, 64, 64, 64),
+    (2, 256, 256, 128, 128),
+    (1, 64, 512, 32, 256),
+])
+def test_rg_lru_sweep(b, s, w, chunk, bw):
+    log_a = -jnp.asarray(RNG.uniform(1e-3, 0.5, size=(b, s, w)), jnp.float32)
+    bb = _rand((b, s, w))
+    out = rg_lru_scan(log_a, bb, chunk=chunk, block_w=bw, interpret=True)
+    want = ref.rg_lru_scan(log_a, bb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# weighted average (WSSL aggregation)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,bm", [(4, 1000, 256), (16, 4096, 2048),
+                                    (2, 33, 16), (8, 2048, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wavg_sweep(n, m, bm, dtype):
+    st = _rand((n, m), dtype)
+    w = jnp.asarray(RNG.dirichlet(np.ones(n)), jnp.float32)
+    out = weighted_average_2d(st, w, block_m=bm, interpret=True)
+    want = ref.weighted_average_2d(st, w)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_wavg_matches_tree_aggregation():
+    """ops.weighted_average == core.wssl.weighted_average on a pytree."""
+    from repro.core import wssl
+    from repro.kernels import ops
+    tree = {"a": _rand((4, 8, 16)), "b": [_rand((4, 32)), _rand((4, 3, 5))]}
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
+    got = wssl.weighted_average(tree, w, use_kernel=True)
+    want = wssl.weighted_average(tree, w, use_kernel=False)
+    for g, x in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(x), atol=1e-5)

@@ -1,0 +1,105 @@
+"""Sharding-rule construction: the per-arch/per-shape decisions that the
+§Perf iterations introduced (act_heads fallback, attn_din rebinding,
+moe_tokens binding, serve fsdp policy, decode kv_seq spreading)."""
+
+import jax
+import pytest
+
+from repro.config import INPUT_SHAPES, get_arch
+from repro.launch import specs as sp
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single-device "production-shaped" mesh: axis sizes 1 keep every rule
+    # resolvable on CPU; build_rules decisions only read axis *names* and
+    # model dims, so we test them against a real 16x16 mesh geometry below
+    # via monkeypatched sizes.
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class _FakeMesh:
+    """Mesh stand-in with production axis sizes (rule logic only reads
+    .shape; spec construction is tested separately on the real mesh)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _rules(arch, shape_name, multi=False):
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16} if multi
+                     else {"data": 16, "model": 16})
+    shape = INPUT_SHAPES[shape_name]
+    return sp.build_rules(mesh, get_arch(arch), shape.kind,
+                          shape.global_batch)
+
+
+def test_head_parallel_only_when_gqa_split_divides():
+    # olmoe: H=16, K=16 -> head-parallel
+    r = _rules("olmoe-1b-7b", "prefill_32k")
+    assert r["act_heads"] == "model" and r["attn_seq"] is None
+    # qwen2-vl: H=64 divides but K=8, G=8 don't -> sequence-parallel
+    r = _rules("qwen2-vl-72b", "prefill_32k")
+    assert r["act_heads"] is None and r["attn_seq"] == "model"
+    # qwen2.5: H=40 doesn't divide -> seq-parallel AND d_model param shard
+    r = _rules("qwen2.5-32b", "prefill_32k")
+    assert r["attn_seq"] == "model"
+    assert r["attn_din"] == "model" and r["attn_dout"] == "model"
+    # gemma3: H=16 divides, K=8/G=2 don't -> seq-parallel, params on heads
+    r = _rules("gemma3-12b", "prefill_32k")
+    assert r["attn_seq"] == "model"
+    assert r["attn_din"] != "model"   # heads themselves shard params
+
+
+def test_moe_tokens_bound_outside_train():
+    assert _rules("olmoe-1b-7b", "train_4k")["moe_tokens"] is None
+    assert _rules("olmoe-1b-7b", "prefill_32k")["moe_tokens"] == ("data",)
+    assert _rules("olmoe-1b-7b", "prefill_32k", multi=True)["moe_tokens"] \
+        == ("pod", "data")
+
+
+def test_train_frees_inner_batch_dim():
+    assert _rules("gemma-2b", "train_4k")["batch"] is None
+    assert _rules("gemma-2b", "prefill_32k")["batch"] == ("data",)
+
+
+def test_decode_kv_seq_spreading():
+    # big batch: kv over model only
+    assert _rules("gemma-2b", "decode_32k")["kv_seq"] == "model"
+    # batch 1: kv spreads over data+model
+    assert _rules("gemma-2b", "long_500k")["kv_seq"] == ("data", "model")
+    assert _rules("gemma-2b", "long_500k", multi=True)["kv_seq"] == \
+        ("pod", "data", "model")
+
+
+def test_serve_fsdp_policy():
+    # small bf16 model-sharded copy -> no fsdp for serving
+    assert _rules("olmoe-1b-7b", "decode_32k")["fsdp"] is None
+    # 32B+ keeps fsdp
+    assert _rules("qwen2.5-32b", "decode_32k")["fsdp"] == "data"
+    # training always keeps fsdp
+    assert _rules("olmoe-1b-7b", "train_4k")["fsdp"] == "data"
+
+
+def test_serve_param_specs_bf16():
+    import jax.numpy as jnp
+    shapes, axes = sp.serve_param_specs(get_arch("mamba2-370m"))
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(shapes))
+
+
+def test_moe_local_dispatch_equivalence():
+    """The dp-local dispatch path must match the global path numerically
+    when capacity is not binding."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.config import reduced
+    from repro.models.moe import _moe_core, moe_init
+    cfg = reduced(get_arch("olmoe-1b-7b"))
+    p, _ = moe_init(jax.random.PRNGKey(0), cfg)
+    xt = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+    out_global, _ = _moe_core(cfg, p, xt)
+    # "local" shards of 16 tokens each, stitched back
+    outs = [_moe_core(cfg, p, xt[i * 16:(i + 1) * 16])[0] for i in range(4)]
+    out_local = jnp.concatenate(outs, axis=0)
+    np.testing.assert_allclose(np.asarray(out_global), np.asarray(out_local),
+                               atol=1e-5)

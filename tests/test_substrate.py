@@ -1,0 +1,193 @@
+"""Substrate tests: data partitions, loaders, optimizer, schedules,
+checkpointing, sharding-rule resolution."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import partition, synthetic
+from repro.data.pipeline import ClientLoader, stacked_client_batch
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         make_schedule, sgd_init, sgd_update)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_partitions_cover_and_disjoint():
+    labels = np.random.default_rng(0).integers(0, 10, size=1000)
+    for parts in (partition.partition_iid(1000, 5),
+                  partition.partition_stratified(labels, 5),
+                  partition.partition_dirichlet(labels, 5, alpha=0.3)):
+        allidx = np.concatenate(parts)
+        assert len(allidx) == 1000
+        assert len(np.unique(allidx)) == 1000
+
+
+def test_stratified_balances_classes():
+    labels = np.random.default_rng(0).integers(0, 10, size=2000)
+    parts = partition.partition_stratified(labels, 4)
+    for p in parts:
+        hist = np.bincount(labels[p], minlength=10) / len(p)
+        assert hist.std() < 0.05
+
+
+def test_dirichlet_skews_classes():
+    labels = np.random.default_rng(0).integers(0, 10, size=4000)
+    parts = partition.partition_dirichlet(labels, 8, alpha=0.1, seed=1)
+    stds = [np.bincount(labels[p], minlength=10).std() for p in parts]
+    strat = partition.partition_stratified(labels, 8)
+    stds_s = [np.bincount(labels[p], minlength=10).std() for p in strat]
+    assert np.mean(stds) > 3 * np.mean(stds_s)  # visibly non-IID
+
+
+def test_subject_partition_no_subject_split():
+    data = synthetic.make_gait_like(n=2000, num_subjects=12, seed=0)
+    parts = partition.partition_by_subject(data["subject"], 4)
+    owners = {}
+    for ci, p in enumerate(parts):
+        for s in np.unique(data["subject"][p]):
+            assert owners.setdefault(int(s), ci) == ci
+
+
+def test_loader_cycles_and_shapes():
+    data = {"x": np.arange(100, dtype=np.float32)[:, None],
+            "y": np.arange(100, dtype=np.int32)}
+    ld = ClientLoader(data, np.arange(40), batch_size=16, seed=0)
+    seen = set()
+    for _ in range(10):
+        b = ld.next_batch()
+        assert b["x"].shape == (16, 1)
+        seen.update(b["y"].tolist())
+    assert seen <= set(range(40))
+    # data-poor client samples with replacement
+    ld2 = ClientLoader(data, np.arange(5), batch_size=16, seed=0)
+    assert ld2.next_batch()["x"].shape == (16, 1)
+
+
+def test_stacked_client_batch():
+    data = {"x": np.random.default_rng(0).normal(size=(64, 3)).astype(np.float32)}
+    loaders = [ClientLoader(data, np.arange(64), 8, seed=i) for i in range(4)]
+    b = stacked_client_batch(loaders)
+    assert b["x"].shape == (4, 8, 3)
+
+
+def test_token_stream_learnable_structure():
+    toks = synthetic.make_token_stream(4, 256, 512, seed=0)
+    assert toks.shape == (4, 256) and toks.max() < 512
+    # markov structure: conditional entropy < unconditional entropy
+    flat = toks.reshape(-1)
+    _, counts = np.unique(flat, return_counts=True)
+    p = counts / counts.sum()
+    h1 = -(p * np.log(p)).sum()
+    pairs = flat[:-1] * 1000 + flat[1:]
+    _, c2 = np.unique(pairs, return_counts=True)
+    p2 = c2 / c2.sum()
+    h2 = -(p2 * np.log(p2)).sum() - h1
+    assert h2 < 0.9 * h1
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_direction_and_decay():
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.asarray([1.0, -1.0, 0.0, 2.0])}
+    state = adamw_init(params)
+    new, state = adamw_update(params, grads, state, lr=0.1,
+                              weight_decay=0.0)
+    assert new["w"][0] < 1.0 and new["w"][1] > 1.0
+    # weight decay shrinks zero-grad coords
+    new2, _ = adamw_update(params, {"w": jnp.zeros((4,))}, adamw_init(params),
+                           lr=0.1, weight_decay=0.5)
+    assert float(new2["w"][2]) < 1.0
+
+
+def test_masked_update_freezes_unselected_clients():
+    params = {"w": jnp.ones((4, 3))}   # 4 clients
+    grads = {"w": jnp.ones((4, 3))}
+    state = adamw_init(params)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    new, st2 = adamw_update(params, grads, state, lr=0.1, mask=mask)
+    assert not jnp.allclose(new["w"][0], params["w"][0])
+    np.testing.assert_array_equal(np.asarray(new["w"][1]),
+                                  np.asarray(params["w"][1]))
+    np.testing.assert_array_equal(np.asarray(st2.m["w"][3]), 0.0)
+
+
+def test_sgd_momentum():
+    params = {"w": jnp.zeros((2,))}
+    grads = {"w": jnp.ones((2,))}
+    state = sgd_init(params)
+    p1, state = sgd_update(params, grads, state, lr=0.1, momentum=0.9)
+    p2, state = sgd_update(p1, grads, state, lr=0.1, momentum=0.9)
+    # momentum accelerates: second step bigger than first
+    assert abs(float(p2["w"][0] - p1["w"][0])) > abs(float(p1["w"][0]))
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((3,), 10.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    small = {"a": jnp.full((3,), 0.01)}
+    c2, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), 0.01, rtol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ["constant", "linear", "cosine"])
+def test_schedules(kind):
+    sched = make_schedule(kind, 1e-3, warmup_steps=10, total_steps=100)
+    assert float(sched(0)) < 1e-3 * 0.2          # warmup starts low
+    assert abs(float(sched(10)) - 1e-3) < 2e-4   # peak after warmup
+    if kind != "constant":
+        assert float(sched(99)) < float(sched(10))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)},
+            "lst": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt")
+        save_checkpoint(path, tree, metadata={"step": 3})
+        like = jax.tree.map(jnp.zeros_like, tree)
+        restored = load_checkpoint(path, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_resolve_spec_drops_nondividing():
+    import jax as _jax
+    from jax.sharding import PartitionSpec
+    from repro.sharding import resolve_spec
+    mesh = _jax.make_mesh((1,), ("model",))
+    # model axis of size 1 divides everything -> kept
+    spec = resolve_spec(mesh, {"heads": "model"}, ("heads", None), (8, 4))
+    assert spec == PartitionSpec("model", None)
+
+
+def test_resolve_spec_no_double_axis():
+    import jax as _jax
+    from jax.sharding import PartitionSpec
+    from repro.sharding import resolve_spec
+    mesh = _jax.make_mesh((1,), ("data",))
+    rules = {"client": ("data",), "fsdp": "data"}
+    spec = resolve_spec(mesh, rules, ("client", "fsdp"), (4, 4))
+    # the second use of the same physical axis must be dropped
+    assert spec[1] is None

