@@ -8,11 +8,11 @@ client selection (ablating the importance weighting).
 
 import numpy as np
 
-from repro.config import WSSLConfig
+from repro.config import Scenario, WSSLConfig
 from repro.configs.wssl_paper import GaitConfig
 from repro.core import fairness
 from repro.core.paper_loop import gait_adapter, train_wssl
-from repro.data.partition import partition_dirichlet
+from repro.data.partition import partition_for_scenario
 from repro.data.pipeline import ClientLoader
 from repro.data.synthetic import make_gait_like
 
@@ -22,7 +22,9 @@ def run(alpha: float, aggregation: str, seed: int = 0):
     tr = {k: v[:6000] for k, v in data.items()}
     val = {k: v[6000:7000] for k, v in data.items()}
     test = {k: v[7000:] for k, v in data.items()}
-    parts = partition_dirichlet(tr["y"], 6, alpha=alpha, seed=seed)
+    # data skew expressed as a repro.sim scenario (partition-time knob)
+    scenario = Scenario(name=f"noniid-{alpha}", skew_alpha=alpha)
+    parts = partition_for_scenario(tr["y"], 6, scenario, seed=seed)
     loaders = [ClientLoader({"x": tr["x"], "y": tr["y"]}, p, 128, seed=i)
                for i, p in enumerate(parts)]
     cfg = WSSLConfig(num_clients=6, participation_fraction=0.5,

@@ -268,6 +268,79 @@ class WSSLConfig:
 
 
 @dataclass(frozen=True)
+class Scenario:
+    """Client-population fault / heterogeneity scenario (``repro.sim``).
+
+    A Scenario describes *who misbehaves and how* along the fixed client
+    axis, without ever changing shapes: cohorts are deterministic index
+    ranges (adversarial clients occupy the lowest indices, stragglers the
+    highest — ``floor(fraction · N)`` clients each), and per-round dropout
+    is Bernoulli over all clients.  Everything that reaches the jit'd round
+    lowers to *dynamic* scalars (``repro.sim.faults.scenario_params``), so
+    every same-shape scenario shares one compiled round executable.
+
+    ``skew_alpha`` is the one partition-time knob: when set, client data is
+    split with a Dirichlet(alpha) label skew instead of stratified/IID
+    (``repro.data.partition.partition_for_scenario``).
+    """
+
+    name: str = "clean"
+    # transient failures: each client independently drops out of a round
+    dropout_prob: float = 0.0
+    # slow clients: the top `fraction` of client indices complete only
+    # 1/slowdown of their local work per round (gradient-scale model in the
+    # fused round; reduced local steps in the paper-scale loop).
+    straggler_fraction: float = 0.0
+    straggler_slowdown: float = 1.0
+    # adversarial clients (lowest indices): training labels shifted by
+    # max(1, C//2) mod C — validation labels (the server-held ζ) stay clean.
+    label_flip_fraction: float = 0.0
+    # noisy-gradient clients (lowest indices): N(0, scale²) added to the
+    # client-stage gradient.
+    gradient_noise_fraction: float = 0.0
+    gradient_noise_scale: float = 0.0
+    # partition-time label skew (Dirichlet alpha); None = stratified/IID.
+    skew_alpha: Optional[float] = None
+    seed: int = 0
+
+    # -- deterministic cohorts ----------------------------------------------
+    @staticmethod
+    def _cohort_size(fraction: float, num_clients: int) -> int:
+        return int(fraction * num_clients + 1e-6)
+
+    def label_flip_ids(self, num_clients: int) -> List[int]:
+        return list(range(self._cohort_size(self.label_flip_fraction,
+                                            num_clients)))
+
+    def noise_ids(self, num_clients: int) -> List[int]:
+        return list(range(self._cohort_size(self.gradient_noise_fraction,
+                                            num_clients)))
+
+    def adversary_ids(self, num_clients: int) -> List[int]:
+        """Union of the corrupted cohorts (both are index prefixes), for
+        reporting; each fault applies only to its own cohort."""
+        k = self._cohort_size(max(self.label_flip_fraction,
+                                  self.gradient_noise_fraction), num_clients)
+        return list(range(k))
+
+    def straggler_ids(self, num_clients: int) -> List[int]:
+        k = self._cohort_size(self.straggler_fraction, num_clients)
+        return list(range(num_clients - k, num_clients))
+
+    def is_clean(self) -> bool:
+        return (self.dropout_prob == 0.0 and self.straggler_fraction == 0.0
+                and self.label_flip_fraction == 0.0
+                and self.gradient_noise_scale == 0.0
+                and self.skew_alpha is None)
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, default=str)
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     steps: int = 100
     rounds: int = 20                  # WSSL communication rounds

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import WSSLConfig
+from repro.config import Scenario, WSSLConfig
 from repro.core import wssl
 from repro.core.split import split_grads
 from repro.data.pipeline import ClientLoader
@@ -76,8 +76,9 @@ def resnet_adapter(cfg) -> ModelAdapter:
 
 
 def _make_split_step(adapter: ModelAdapter, lr: float):
-    @jax.jit
-    def step(client_params, server_params, opt_c, opt_s, x, y):
+    @functools.partial(jax.jit, static_argnames=("noise_sigma",))
+    def step(client_params, server_params, opt_c, opt_s, x, y,
+             noise_rng, noise_sigma=0.0):
         def client_fn(cp):
             return adapter.client_apply(cp, x)
 
@@ -86,7 +87,13 @@ def _make_split_step(adapter: ModelAdapter, lr: float):
 
         res = split_grads(client_fn, server_loss_fn, client_params,
                           server_params)
-        new_c, opt_c = adamw_update(client_params, res.grads_client, opt_c,
+        g_client = res.grads_client
+        # scenario gradient-noise fault (repro.sim); sigma is static so the
+        # clean trace carries no noise ops (at most 2 traces per scale)
+        if noise_sigma:
+            from repro.sim.faults import add_gradient_noise
+            g_client = add_gradient_noise(g_client, noise_rng, noise_sigma)
+        new_c, opt_c = adamw_update(client_params, g_client, opt_c,
                                     lr=lr, weight_decay=1e-4)
         new_s, opt_s = adamw_update(server_params, res.grads_server, opt_s,
                                     lr=lr, weight_decay=1e-4)
@@ -120,7 +127,8 @@ def train_wssl(adapter: ModelAdapter,
                rounds: int = 20,
                local_steps: int = 10,
                lr: float = 1e-3,
-               seed: int = 0) -> Dict[str, Any]:
+               seed: int = 0,
+               scenario: Optional[Scenario] = None) -> Dict[str, Any]:
     n = wssl_cfg.num_clients
     assert len(loaders) == n
     rng = jax.random.PRNGKey(seed)
@@ -132,11 +140,25 @@ def train_wssl(adapter: ModelAdapter,
     step = _make_split_step(adapter, lr)
     evaluate = _make_eval(adapter)
 
+    # ---- scenario faults (repro.sim), host-side at paper scale ----------
+    sc = scenario if scenario is not None else Scenario()
+    flip_clients = set(sc.label_flip_ids(n))
+    noisy_clients = set(sc.noise_ids(n))
+    stragglers = set(sc.straggler_ids(n))
+    fault_rng = np.random.default_rng(sc.seed + 7919 * seed + 1)
+    noise_rng = jax.random.PRNGKey(sc.seed + 7919 * seed + 2)
+    from repro.sim.faults import label_shift
+    num_classes = int(max(int(np.max(ld.data["y"])) for ld in loaders)) + 1
+    flip_shift = label_shift(num_classes)
+    strag_steps = max(1, int(round(local_steps / max(sc.straggler_slowdown,
+                                                    1.0))))
+
     importance = jnp.full((n,), 1.0 / n, jnp.float32)
     participation = np.zeros(n)
     history: Dict[str, Any] = {"round": [], "test_acc": [], "test_loss": [],
-                               "val_loss": [], "selected": [],
-                               "importance": [], "bytes_up": []}
+                               "val_loss": [], "selected": [], "dropped": [],
+                               "importance": [], "bytes_up": [],
+                               "scenario": sc.name}
     xv, yv = jnp.asarray(val["x"]), jnp.asarray(val["y"])
     xt, yt = jnp.asarray(test["x"]), jnp.asarray(test["y"])
 
@@ -154,16 +176,27 @@ def train_wssl(adapter: ModelAdapter,
             k = wssl_cfg.num_selected()
             sel = sorted(int(i) for i in np.asarray(
                 wssl.weighted_sample(sub, importance, k)))
+        # transient failures: selected clients drop out of the round
+        dropped = [i for i in sel
+                   if fault_rng.random() < sc.dropout_prob]
+        sel = [i for i in sel if i not in dropped]
         participation[sel] += 1
 
         # ---- Algorithm 2: local split training ------------------------
         round_bytes = 0
         for i in sel:
-            for _ in range(local_steps):
+            steps_i = strag_steps if i in stragglers else local_steps
+            for s in range(steps_i):
                 b = loaders[i].next_batch()
                 x, y = jnp.asarray(b["x"]), jnp.asarray(b["y"])
+                if i in flip_clients:
+                    y = (y + flip_shift) % num_classes
+                sigma = (sc.gradient_noise_scale if i in noisy_clients
+                         else 0.0)
+                key = jax.random.fold_in(noise_rng, r * 131071 + i * 521 + s)
                 clients[i], server, opt_clients[i], opt_server, loss = step(
-                    clients[i], server, opt_clients[i], opt_server, x, y)
+                    clients[i], server, opt_clients[i], opt_server, x, y,
+                    key, noise_sigma=float(sigma))
                 round_bytes += act_bytes_per_example * x.shape[0] * 2
         bytes_up_total += round_bytes
 
@@ -174,8 +207,9 @@ def train_wssl(adapter: ModelAdapter,
                                              prev=importance)
 
         # ---- weighted aggregation + sync --------------------------------
-        mask = wssl.selection_mask(jnp.asarray(sel, jnp.int32), n)
-        coefs = wssl.aggregation_weights(importance, mask, wssl_cfg)
+        mask = (wssl.selection_mask(jnp.asarray(sel, jnp.int32), n)
+                if sel else jnp.zeros((n,), jnp.float32))
+        coefs = wssl.safe_aggregation_weights(importance, mask, wssl_cfg)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
         global_client = wssl.weighted_average(stacked, coefs)
         clients = [jax.tree.map(jnp.copy, global_client) for _ in range(n)]
@@ -187,6 +221,7 @@ def train_wssl(adapter: ModelAdapter,
         history["test_loss"].append(float(tl))
         history["val_loss"].append([float(v) for v in val_losses])
         history["selected"].append(sel)
+        history["dropped"].append(dropped)
         history["importance"].append([float(v) for v in importance])
         history["bytes_up"].append(round_bytes)
 
@@ -218,12 +253,13 @@ def train_centralized(adapter: ModelAdapter,
     xt, yt = jnp.asarray(test["x"]), jnp.asarray(test["y"])
 
     history: Dict[str, Any] = {"round": [], "test_acc": [], "test_loss": []}
+    dummy_key = jax.random.PRNGKey(0)   # noise branch is traced away
     for r in range(rounds):
         for _ in range(steps_per_round):
             b = loader.next_batch()
             client, server, opt_c, opt_s, _ = step(
                 client, server, opt_c, opt_s,
-                jnp.asarray(b["x"]), jnp.asarray(b["y"]))
+                jnp.asarray(b["x"]), jnp.asarray(b["y"]), dummy_key)
         tl, ta = evaluate(client, server, xt, yt)
         history["round"].append(r)
         history["test_acc"].append(float(ta))

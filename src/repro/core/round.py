@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, TrainConfig, WSSLConfig
 from repro.core import wssl
 from repro.models import transformer as tf
+from repro.sim import faults as sim_faults
 from repro.optim import adamw_update, clip_by_global_norm, make_optimizer
 from repro.sharding import current_mesh, shard_activation
 
@@ -154,7 +155,8 @@ def _per_client_losses(cfg: ModelConfig, server_params: Params,
 
 
 def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
-               val_batch: Optional[Dict[str, jax.Array]] = None, *,
+               val_batch: Optional[Dict[str, jax.Array]] = None,
+               scenario: Optional["sim_faults.ScenarioParams"] = None, *,
                model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
                train_cfg: TrainConfig, schedule,
                impl: str = "chunked") -> Tuple[WSSLState, RoundMetrics]:
@@ -162,7 +164,16 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
     val_batch: tokens/labels (bv, S) — the server-held ζ.  When val_batch is
     None the validation pass is skipped and importance weights carry over
     (used by the dry-run, which lowers the train step alone; the production
-    launcher runs the validation step at a lower cadence)."""
+    launcher runs the validation step at a lower cadence).
+
+    scenario: optional dynamic ScenarioParams (repro.sim) — dropped clients
+    compose into the selection mask as zeros, adversarial clients get
+    label/gradient corruption under jnp.where, stragglers contribute a
+    scaled gradient.  Shapes never change and the params are traced scalars,
+    so one compiled executable serves every same-shape scenario.  The fault
+    rngs are fold_in-derived, leaving the selection stream and the carried
+    state rng untouched — the all-zero (clean) params reproduce the
+    fault-free round bit-for-bit."""
     n = wssl_cfg.num_clients
     remat = train_cfg.remat
     rng, rng_sel = jax.random.split(state.rng)
@@ -172,10 +183,20 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
     idx = wssl.weighted_sample(rng_sel, state.importance, k)
     mask = wssl.selection_mask(idx, n)
     mask = jnp.where(state.round_index == 0, jnp.ones_like(mask), mask)
+
+    # ---- fault injection (repro.sim): dropout ⇒ zero-mask ---------------
+    plan = None
+    if scenario is not None:
+        plan = sim_faults.sample_fault_plan(
+            jax.random.fold_in(rng_sel, 0x0DD), scenario, n)
+        mask = mask * plan.keep
+
     agg_w = wssl.aggregation_weights(state.importance, mask, wssl_cfg)
 
     tokens = shard_activation(batch["tokens"], "client", None, None)
     labels = shard_activation(batch["labels"], "client", None, None)
+    if plan is not None:
+        labels = sim_faults.corrupt_labels(plan, labels, model_cfg.vocab_size)
     embeds = batch.get("embeds")
 
     # ---- Algorithm 2 steps 2-4: split fwd / two-phase backward --------
@@ -206,6 +227,14 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
         g_client, _ = clip_by_global_norm(g_client, train_cfg.grad_clip)
         g_server, _ = clip_by_global_norm(g_server, train_cfg.grad_clip)
 
+    if plan is not None:
+        # adversarial noise models corruption of the *sent* client update,
+        # so it applies after the shared global-norm clip — otherwise one
+        # adversary's noise inflates the joint norm and attenuates every
+        # clean client's gradient through the clip factor
+        g_client = sim_faults.corrupt_client_grads(
+            plan, g_client, jax.random.fold_in(rng_sel, 0xBAD))
+
     # ---- optimizer (masked for unselected clients) ---------------------
     _, opt_update = make_optimizer(train_cfg.optimizer)
     lr = schedule(state.round_index)
@@ -215,6 +244,19 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
     new_server, new_opt_s = opt_update(
         state.server_params, g_server, state.opt_server, lr=lr,
         weight_decay=train_cfg.weight_decay)
+    if plan is not None:
+        # straggler partial progress on the post-optimizer update (a
+        # constant gradient scale would be inert under Adam)
+        new_cstack = sim_faults.scale_client_updates(plan, new_cstack,
+                                                     state.client_stack)
+        # an all-dropped round must leave the server untouched too: with no
+        # participants the CE term is zero but the aux term and weight decay
+        # would still step (and decay) the server stage every empty round
+        alive = mask.sum() > 0
+        keep_old = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(alive, a, b), new, old)
+        new_server = keep_old(new_server, state.server_params)
+        new_opt_s = keep_old(new_opt_s, state.opt_server)
 
     # ---- validation on the server-held ζ → importance ------------------
     if val_batch is not None:
@@ -234,7 +276,11 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
         importance = state.importance
 
     # ---- Algorithm 2 step 5: weighted aggregation + sync ----------------
-    agg_final = wssl.aggregation_weights(importance, mask, wssl_cfg)
+    if plan is not None:
+        # dropout can empty the selection; fall back to a no-op sync
+        agg_final = wssl.safe_aggregation_weights(importance, mask, wssl_cfg)
+    else:
+        agg_final = wssl.aggregation_weights(importance, mask, wssl_cfg)
     global_client = wssl.weighted_average(new_cstack, agg_final)
     new_cstack = wssl.broadcast_global(new_cstack, global_client)
 

@@ -92,6 +92,20 @@ def aggregation_weights(weights: jax.Array, mask: jax.Array,
     return w / jnp.maximum(w.sum(), 1e-12)
 
 
+def safe_aggregation_weights(weights: jax.Array, mask: jax.Array,
+                             cfg: WSSLConfig) -> jax.Array:
+    """``aggregation_weights`` with an empty-mask fallback.
+
+    Under fault injection (repro.sim) every selected client can drop out of
+    a round; plain masking would then aggregate with all-zero coefficients
+    and zero the global stage.  Falling back to importance over *all*
+    clients makes the empty round a no-op sync (clients start each round
+    synchronized, and unselected clients never update)."""
+    w = aggregation_weights(weights, mask, cfg)
+    full = aggregation_weights(weights, jnp.ones_like(mask), cfg)
+    return jnp.where(mask.sum() > 0, w, full)
+
+
 def weighted_average(stacked: Params, coefs: jax.Array, *,
                      use_kernel: bool = False) -> Params:
     """θ_global = Σ_i w_i θ_i over the stacked client axis (leaf dim 0)."""

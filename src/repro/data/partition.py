@@ -54,6 +54,21 @@ def partition_dirichlet(labels: np.ndarray, num_clients: int,
     return [np.sort(np.array(p, dtype=np.int64)) for p in parts]
 
 
+def partition_for_scenario(labels: np.ndarray, num_clients: int,
+                           scenario=None, seed: int = 0) -> List[np.ndarray]:
+    """Scenario-aware split (repro.sim): Dirichlet label skew when the
+    scenario sets ``skew_alpha``, the paper's stratified protocol otherwise.
+
+    ``scenario`` is a :class:`repro.config.Scenario` (or anything with a
+    ``skew_alpha`` attribute); None means clean/stratified."""
+    alpha = getattr(scenario, "skew_alpha", None)
+    sc_seed = getattr(scenario, "seed", 0)
+    if alpha is None:
+        return partition_stratified(labels, num_clients, seed=seed)
+    return partition_dirichlet(labels, num_clients, alpha=alpha,
+                               seed=seed + sc_seed)
+
+
 def partition_by_subject(subjects: np.ndarray, num_clients: int
                          ) -> List[np.ndarray]:
     """Assign whole subjects to clients (the gait dataset's natural split)."""

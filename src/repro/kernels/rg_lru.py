@@ -60,7 +60,7 @@ def rg_lru_scan(log_a: jax.Array, b: jax.Array, *, chunk: int = 128,
                                lambda b__, wi, j: (b__, j, wi)),
         out_shape=jax.ShapeDtypeStruct((bsz, s, w), b.dtype),
         scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(log_a, b)

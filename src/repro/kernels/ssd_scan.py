@@ -93,7 +93,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b_: jax.Array,
                                lambda b__, hi, j: (b__, j, hi, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_h, n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, x, dt, b_, c_)

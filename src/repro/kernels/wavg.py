@@ -46,7 +46,7 @@ def weighted_average_2d(stacked: jax.Array, weights: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((mp,), stacked.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(weights, stacked)

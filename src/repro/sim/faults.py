@@ -1,0 +1,154 @@
+"""jit-safe fault injection for WSSL rounds.
+
+A :class:`~repro.config.Scenario` lowers to a :class:`ScenarioParams` — a
+pytree of dynamic fp32 scalars — so the fault-injected round traces *once*
+and every same-shape scenario reuses the executable.  Per round the params
+are sampled into a :class:`FaultPlan` of static ``(N,)`` vectors that
+compose with the Gumbel-top-k selection mask:
+
+* ``keep``        — 1/0 per-client round survival (dropout ⇒ zero-mask:
+                    dropped clients multiply into the participation mask,
+                    exactly like an unselected client).
+* ``flip``        — 1 for adversarial clients whose *training* labels are
+                    shifted under ``jnp.where`` (shapes never change).
+* ``grad_scale``  — stragglers complete 1/slowdown of a full local step;
+                    applied to the parameter *update* (post-optimizer),
+                    because Adam's normalized step is invariant to constant
+                    gradient scaling.
+* ``noise_scale`` — σ of Gaussian noise added to the client-stage gradient.
+
+Every transform is an exact no-op at the clean parameter point (multiply by
+1.0, add 0·ε, ``where`` on an all-false mask), which is what makes the
+``clean`` scenario bit-for-bit identical to the fault-free round — see
+``tests/test_sim.py::test_clean_scenario_equals_plain_round``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import Scenario
+
+Params = Any
+
+
+class ScenarioParams(NamedTuple):
+    """Dynamic (traced) scalars of a Scenario — the jit input."""
+
+    dropout_prob: jax.Array
+    straggler_fraction: jax.Array
+    straggler_slowdown: jax.Array
+    label_flip_fraction: jax.Array
+    gradient_noise_fraction: jax.Array
+    gradient_noise_scale: jax.Array
+
+
+class FaultPlan(NamedTuple):
+    """Per-round (N,) fault vectors, composable with the selection mask."""
+
+    keep: jax.Array          # (N,) 1.0 = survives the round, 0.0 = dropped
+    flip: jax.Array          # (N,) 1.0 = training labels corrupted
+    grad_scale: jax.Array    # (N,) straggler update fraction (1.0 = full)
+    noise_scale: jax.Array   # (N,) gradient-noise sigma (0.0 = none)
+
+
+def scenario_params(sc: Scenario) -> ScenarioParams:
+    """Lower a Scenario's jit-relevant knobs to dynamic fp32 scalars."""
+    f = lambda v: jnp.asarray(v, jnp.float32)
+    return ScenarioParams(
+        dropout_prob=f(sc.dropout_prob),
+        straggler_fraction=f(sc.straggler_fraction),
+        straggler_slowdown=f(sc.straggler_slowdown),
+        label_flip_fraction=f(sc.label_flip_fraction),
+        gradient_noise_fraction=f(sc.gradient_noise_fraction),
+        gradient_noise_scale=f(sc.gradient_noise_scale),
+    )
+
+
+def sample_fault_plan(rng: jax.Array, sp: ScenarioParams,
+                      num_clients: int) -> FaultPlan:
+    """One round's FaultPlan.  Cohorts are deterministic index ranges
+    (``floor(fraction·N)`` adversaries from the bottom, stragglers from the
+    top — matching ``Scenario.adversary_ids``/``straggler_ids``); only
+    dropout consumes randomness."""
+    n = num_clients
+    ids = jnp.arange(n, dtype=jnp.float32)
+    flip = (ids + 1.0 <= sp.label_flip_fraction * n + 1e-6)
+    noisy = (ids + 1.0 <= sp.gradient_noise_fraction * n + 1e-6)
+    n_strag = jnp.floor(sp.straggler_fraction * n + 1e-6)
+    strag = ids >= n - n_strag
+    dropped = jax.random.bernoulli(rng, sp.dropout_prob, (n,))
+    slow = 1.0 / jnp.maximum(sp.straggler_slowdown, 1.0)
+    return FaultPlan(
+        keep=1.0 - dropped.astype(jnp.float32),
+        flip=flip.astype(jnp.float32),
+        grad_scale=jnp.where(strag, slow, 1.0),
+        noise_scale=noisy.astype(jnp.float32) * sp.gradient_noise_scale,
+    )
+
+
+def _per_client(vec: jax.Array, ref: jax.Array) -> jax.Array:
+    """Broadcast a (N,) fault vector against a (N, ...) tensor."""
+    return vec.reshape((-1,) + (1,) * (ref.ndim - 1))
+
+
+def label_shift(num_classes: int) -> int:
+    """The label-flip attack's class shift — shared by the jit path here and
+    the host-side paper loop so the two stay in lockstep."""
+    return max(1, num_classes // 2)
+
+
+def corrupt_labels(plan: FaultPlan, labels: jax.Array,
+                   num_classes: int) -> jax.Array:
+    """Shift adversarial clients' labels by label_shift(C) mod C.  labels:
+    (N, ...) int; the flip mask selects whole clients under jnp.where."""
+    flipped = (labels + label_shift(num_classes)) % num_classes
+    return jnp.where(_per_client(plan.flip, labels) > 0, flipped, labels)
+
+
+def add_gradient_noise(grads: Params, rng: jax.Array, sigma,
+                       per_client: bool = False) -> Params:
+    """N(0, σ²) on every gradient leaf with per-leaf fold_in keying — the
+    one noise model, shared by the fused round (``corrupt_client_grads``)
+    and the host-side paper loop.  ``sigma`` is a scalar, or a (N,) vector
+    broadcast over stacked (N, ...) leaves when ``per_client``."""
+    leaves, treedef = jax.tree.flatten(grads)
+    out = []
+    for i, g in enumerate(leaves):
+        s = _per_client(sigma, g) if per_client else jnp.asarray(sigma)
+        noise = jax.random.normal(jax.random.fold_in(rng, i), g.shape,
+                                  g.dtype)
+        out.append(g + s.astype(g.dtype) * noise)
+    return jax.tree.unflatten(treedef, out)
+
+
+def corrupt_client_grads(plan: FaultPlan, grads: Params,
+                         rng: jax.Array) -> Params:
+    """Adversarial Gaussian noise on stacked (N, ...) client-stage
+    gradients.  Exact identity when noise≡0.  (Straggler slowdown is NOT
+    applied here: a constant gradient scale is inert under Adam's
+    normalized step — use ``scale_client_updates`` on the optimizer's
+    output instead.)"""
+    return add_gradient_noise(grads, rng, plan.noise_scale, per_client=True)
+
+
+def scale_client_updates(plan: FaultPlan, new_params: Params,
+                         old_params: Params) -> Params:
+    """Straggler partial progress: θ ← θ_old + grad_scale·(θ_new − θ_old)
+    per client, applied to the post-optimizer update so it bites under
+    scale-invariant optimizers (Adam).  Non-stragglers keep θ_new
+    bit-for-bit via jnp.where."""
+    strag = plan.grad_scale < 1.0
+
+    def one(new, old):
+        sc = _per_client(plan.grad_scale, new).astype(jnp.float32)
+        m = _per_client(strag, new)
+        scaled = (old.astype(jnp.float32)
+                  + sc * (new.astype(jnp.float32) - old.astype(jnp.float32))
+                  ).astype(new.dtype)
+        return jnp.where(m, scaled, new)
+
+    return jax.tree.map(one, new_params, old_params)

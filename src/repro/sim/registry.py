@@ -1,0 +1,44 @@
+"""Named scenario registry.
+
+Presets cover the robustness axes of the paper's §VI claims (and the threat
+models in Pasquini et al.'s split-learning inference attacks): transient
+client failure, compute heterogeneity, label-flip / noisy-gradient
+adversaries, and Dirichlet data skew.  All presets with the same client
+count and batch shapes share one compiled round executable — the scenario
+reaches the jit'd round only as dynamic scalars (``faults.scenario_params``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.config import Scenario
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(sc: Scenario) -> Scenario:
+    SCENARIOS[sc.name] = sc
+    return sc
+
+
+register_scenario(Scenario(name="clean"))
+register_scenario(Scenario(name="dropout-30", dropout_prob=0.3))
+register_scenario(Scenario(name="stragglers", straggler_fraction=0.5,
+                           straggler_slowdown=4.0))
+register_scenario(Scenario(name="label-flip-adversary",
+                           label_flip_fraction=0.25))
+register_scenario(Scenario(name="grad-noise-adversary",
+                           gradient_noise_fraction=0.25,
+                           gradient_noise_scale=0.5))
+register_scenario(Scenario(name="noniid-dirichlet", skew_alpha=0.1))
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}")
+    return SCENARIOS[name]
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)

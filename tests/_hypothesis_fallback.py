@@ -1,0 +1,91 @@
+"""Optional-hypothesis shim for the property-test modules.
+
+The tier-1 suite must collect and run on a bare environment (no
+``hypothesis`` wheel).  Import ``given``/``settings``/``st`` from here:
+with hypothesis installed you get the real library; without it, a thin
+fallback degrades every ``@given`` case to a deck of fixed-seed examples —
+deterministic, zero-dependency, and strictly weaker (no shrinking, no
+adaptive search), which is the right trade for a smoke environment.
+
+Only the strategy combinators the test-suite actually uses are shimmed;
+extend ``_St`` when a new one is needed.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only on bare envs
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 12
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda r: float(r.uniform(min_value, max_value)))
+
+        @staticmethod
+        def integers(min_value=0, max_value=10, **_kw):
+            return _Strategy(
+                lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.integers(0, 2)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            def draw(r):
+                size = int(r.integers(min_size, max_size + 1))
+                return [elements.draw(r) for _ in range(size)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda r: items[int(r.integers(0, len(items)))])
+
+    st = _St()
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            pos_names = ()
+            if arg_strategies:
+                sig = [p for p in inspect.signature(fn).parameters]
+                pos_names = tuple(sig[:len(arg_strategies)])
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for example in range(_FALLBACK_EXAMPLES):
+                    rng = np.random.default_rng(7919 * example + 13)
+                    drawn = {name: s.draw(rng)
+                             for name, s in zip(pos_names, arg_strategies)}
+                    drawn.update({k: s.draw(rng)
+                                  for k, s in kw_strategies.items()})
+                    fn(*args, **kwargs, **drawn)
+            # hide the drawn parameters from pytest's fixture resolution
+            # (functools.wraps exposes fn's signature via __wrapped__)
+            wrapper.__signature__ = inspect.Signature()
+            wrapper.hypothesis_fallback = True
+            return wrapper
+        return deco
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco

@@ -131,6 +131,23 @@ def test_wavg_sweep(n, m, bm, dtype):
                                np.asarray(want, np.float32), atol=tol)
 
 
+@pytest.mark.parametrize("n,m,bm", [
+    (4, 4096, 2048),        # exact multiple: no padding
+    (4, 2 * 2048 + 931, 2048),   # M % block_m != 0 -> padding branch
+    (3, 97, 64),            # single padded tile
+])
+def test_wavg_parity_vs_wssl_reference(n, m, bm):
+    """kernels/wavg vs the reference path in wssl.weighted_average, incl.
+    M not divisible by block_m (interpret mode on CPU)."""
+    from repro.core import wssl
+    st = _rand((n, m))
+    w = jnp.asarray(RNG.dirichlet(np.ones(n)), jnp.float32)
+    got = weighted_average_2d(st, w, block_m=bm, interpret=True)
+    want = wssl.weighted_average({"x": st}, w)["x"]
+    assert got.shape == (m,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
 def test_wavg_matches_tree_aggregation():
     """ops.weighted_average == core.wssl.weighted_average on a pytree."""
     from repro.core import wssl

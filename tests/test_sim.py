@@ -1,0 +1,287 @@
+"""repro.sim: fault-plan properties, scenario registry, masked-round
+equivalence (clean ≡ fault-free wssl_round bit-for-bit), adversary
+down-weighting, and the one-executable guarantee."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro.config import ModelConfig, Scenario, TrainConfig, WSSLConfig
+from repro.core.round import init_state, make_round_fn
+from repro.data.synthetic import lm_batch
+from repro.sim import (SCENARIOS, FaultPlan, corrupt_client_grads,
+                       corrupt_labels, get_scenario, list_scenarios,
+                       sample_fault_plan, scenario_params)
+
+TINY = ModelConfig(name="tiny-sim", num_layers=2, d_model=32, num_heads=2,
+                   num_kv_heads=2, d_ff=64, vocab_size=64,
+                   dtype="float32", param_dtype="float32")
+
+
+def _round_setup(frac=0.5, temp=1.0, ema=0.5, lr=1e-3):
+    w = WSSLConfig(num_clients=4, participation_fraction=frac,
+                   importance_temp=temp, importance_ema=ema)
+    t = TrainConfig(remat=False, learning_rate=lr, warmup_steps=0,
+                    schedule="constant")
+    state, _ = init_state(jax.random.PRNGKey(0), TINY, w, t)
+    return w, t, state, make_round_fn(TINY, w, t, impl="dense")
+
+
+def _mk_batch(n, b, s, seed, shared=False):
+    d = lm_batch(b if shared else n * b, s, TINY.vocab_size, seed=seed)
+    toks, labs = jnp.asarray(d["tokens"]), jnp.asarray(d["labels"])
+    if shared:
+        return {"tokens": jnp.broadcast_to(toks[None], (n, b, s)),
+                "labels": jnp.broadcast_to(labs[None], (n, b, s))}
+    return {"tokens": toks.reshape(n, b, s), "labels": labs.reshape(n, b, s)}
+
+
+def _val_batch(s=16):
+    d = lm_batch(4, s, TINY.vocab_size, seed=999)
+    return {"tokens": jnp.asarray(d["tokens"]),
+            "labels": jnp.asarray(d["labels"])}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_presets_present():
+    names = list_scenarios()
+    for required in ("clean", "dropout-30", "stragglers",
+                     "label-flip-adversary", "noniid-dirichlet"):
+        assert required in names
+    assert len(names) >= 5
+    assert get_scenario("clean").is_clean()
+    assert not get_scenario("dropout-30").is_clean()
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+    # every preset's name matches its registry key
+    for name, sc in SCENARIOS.items():
+        assert sc.name == name
+
+
+def test_scenario_cohorts_deterministic():
+    sc = get_scenario("label-flip-adversary")       # fraction 0.25
+    assert sc.adversary_ids(4) == [0]
+    assert sc.adversary_ids(8) == [0, 1]
+    assert sc.straggler_ids(4) == []
+    st_ = get_scenario("stragglers")                # fraction 0.5
+    assert st_.straggler_ids(4) == [2, 3]
+    assert st_.adversary_ids(4) == []
+    # each fault gets its own prefix cohort; adversary_ids is their union
+    mixed = Scenario(label_flip_fraction=0.25, gradient_noise_fraction=0.5,
+                     gradient_noise_scale=0.5)
+    assert mixed.label_flip_ids(8) == [0, 1]
+    assert mixed.noise_ids(8) == [0, 1, 2, 3]
+    assert mixed.adversary_ids(8) == [0, 1, 2, 3]
+    plan = sample_fault_plan(jax.random.PRNGKey(0), scenario_params(mixed), 8)
+    np.testing.assert_array_equal(np.asarray(plan.flip),
+                                  [1, 1, 0, 0, 0, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(plan.noise_scale > 0),
+                                  [1, 1, 1, 1, 0, 0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 16), seed=st.integers(0, 1000))
+def test_fault_plan_shapes_and_ranges(n, seed):
+    sp = scenario_params(Scenario(dropout_prob=0.4, straggler_fraction=0.5,
+                                  straggler_slowdown=4.0,
+                                  label_flip_fraction=0.25,
+                                  gradient_noise_fraction=0.25,
+                                  gradient_noise_scale=0.5))
+    plan = sample_fault_plan(jax.random.PRNGKey(seed), sp, n)
+    for v in plan:
+        assert v.shape == (n,)
+    keep = np.asarray(plan.keep)
+    assert set(np.unique(keep)) <= {0.0, 1.0}
+    assert np.asarray(plan.flip).sum() == n // 4
+    # stragglers contribute 1/slowdown of a full step
+    gs = np.asarray(plan.grad_scale)
+    assert ((gs == 1.0) | (gs == 0.25)).all()
+    assert (gs == 0.25).sum() == n // 2
+
+
+def test_clean_plan_is_identity():
+    sp = scenario_params(get_scenario("clean"))
+    plan = sample_fault_plan(jax.random.PRNGKey(0), sp, 8)
+    np.testing.assert_array_equal(np.asarray(plan.keep), 1.0)
+    np.testing.assert_array_equal(np.asarray(plan.flip), 0.0)
+    np.testing.assert_array_equal(np.asarray(plan.grad_scale), 1.0)
+    np.testing.assert_array_equal(np.asarray(plan.noise_scale), 0.0)
+    # identity transforms, bit-for-bit
+    labels = jax.random.randint(jax.random.PRNGKey(1), (8, 2, 16), 0, 64)
+    np.testing.assert_array_equal(
+        np.asarray(corrupt_labels(plan, labels, 64)), np.asarray(labels))
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(2), (8, 3, 5))}
+    out = corrupt_client_grads(plan, grads, jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(grads["w"]))
+
+
+def test_full_dropout_zeroes_every_client():
+    sp = scenario_params(Scenario(dropout_prob=1.0))
+    plan = sample_fault_plan(jax.random.PRNGKey(0), sp, 8)
+    np.testing.assert_array_equal(np.asarray(plan.keep), 0.0)
+
+
+def test_corrupt_labels_only_flips_adversaries():
+    plan = FaultPlan(keep=jnp.ones((4,)),
+                     flip=jnp.asarray([1.0, 0.0, 0.0, 0.0]),
+                     grad_scale=jnp.ones((4,)),
+                     noise_scale=jnp.zeros((4,)))
+    labels = jax.random.randint(jax.random.PRNGKey(0), (4, 2, 8), 0, 64)
+    out = corrupt_labels(plan, labels, 64)
+    np.testing.assert_array_equal(np.asarray(out[1:]),
+                                  np.asarray(labels[1:]))
+    np.testing.assert_array_equal(np.asarray(out[0]),
+                                  np.asarray((labels[0] + 32) % 64))
+
+
+# ---------------------------------------------------------------------------
+# masked-round equivalence + corruption dynamics
+# ---------------------------------------------------------------------------
+
+def test_clean_scenario_equals_plain_round():
+    """scenario `clean` ≡ the fault-free wssl_round, bit-for-bit: every
+    fault op lowers to an exact identity and the fault rngs are fold_in
+    derived, leaving the selection stream untouched."""
+    w, t, state, rf = _round_setup()
+    batch = _mk_batch(4, 2, 16, seed=0)
+    val = _val_batch()
+    plain_state, plain_m = rf(state, batch, val)
+    sim_state, sim_m = rf(state, batch, val,
+                          scenario_params(get_scenario("clean")))
+    for a, b in zip(jax.tree.leaves((plain_state, plain_m)),
+                    jax.tree.leaves((sim_state, sim_m))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_label_flip_importance_decreases_monotonically():
+    """The importance weight of a label-flipped client falls monotonically
+    (to EMA-equilibrium wobble ≤1e-3/round) and ends below the clean-client
+    mean.  All clients share identical batches so the only per-client
+    difference is the injected fault."""
+    w, t, state, rf = _round_setup(frac=1.0, temp=0.3, ema=0.7, lr=1e-2)
+    rf = jax.jit(rf)
+    val = _val_batch()
+    sp = scenario_params(get_scenario("label-flip-adversary"))
+    hist = []
+    for r in range(8):
+        state, m = rf(state, _mk_batch(4, 2, 16, seed=r, shared=True),
+                      val, sp)
+        hist.append(float(m.importance[0]))
+    assert all(hist[i + 1] <= hist[i] + 1e-3 for i in range(len(hist) - 1)), \
+        hist
+    assert hist[0] - hist[-1] > 0.02, hist            # substantial decrease
+    imp = np.asarray(m.importance)
+    assert imp[0] < imp[1:].mean()                    # below clean mean
+
+
+def test_dropout_zero_masks_clients():
+    """Dropped clients compose into the participation mask as zeros; an
+    all-dropped round is a no-op sync (client stacks unchanged)."""
+    w, t, state, rf = _round_setup(frac=1.0)
+    rf = jax.jit(rf)
+    sp = scenario_params(Scenario(dropout_prob=1.0))
+    state2, m = rf(state, _mk_batch(4, 2, 16, seed=0), None, sp)
+    assert float(m.mask.sum()) == 0.0
+    for a, b in zip(jax.tree.leaves(state.client_stack),
+                    jax.tree.leaves(state2.client_stack)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert np.isfinite(jax.tree.leaves(state2.client_stack)[0]).all()
+    # the server stage must not step either (no CE signal, and weight decay
+    # must not shrink it on rounds in which nobody participated)
+    for a, b in zip(jax.tree.leaves(state.server_params),
+                    jax.tree.leaves(state2.server_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_slowdown_is_not_inert():
+    """Stragglers must make observably less progress than full clients even
+    under Adam (whose normalized step is invariant to constant gradient
+    scaling — the update itself is scaled instead).  All clients share one
+    batch, so per-client val losses differ only through the fault."""
+    w, t, state, rf = _round_setup(frac=1.0)
+    rf = jax.jit(rf)
+    batch, val = _mk_batch(4, 2, 16, seed=0, shared=True), _val_batch()
+    _, m_clean = rf(state, batch, val, scenario_params(get_scenario("clean")))
+    _, m_strag = rf(state, batch, val,
+                    scenario_params(get_scenario("stragglers")))
+    vc, vs = np.asarray(m_clean.val_loss), np.asarray(m_strag.val_loss)
+    # clean: identical clients -> identical val losses
+    assert np.ptp(vc) < 1e-6
+    # stragglers preset: clients 2,3 at 4x slowdown; cohorts split visibly
+    assert abs(vs[0] - vs[1]) < 1e-6 and abs(vs[2] - vs[3]) < 1e-6
+    assert abs(vs[2] - vs[0]) > 1e-4, vs
+
+
+def test_one_executable_serves_all_scenarios():
+    """Same-shape configs must not retrace per scenario: the scenario
+    reaches the jit'd round only as dynamic scalars."""
+    w, t, state, rf = _round_setup(frac=1.0)
+    rf = jax.jit(rf)
+    batch, val = _mk_batch(4, 2, 16, seed=0), _val_batch()
+    for name in list_scenarios():
+        rf(state, batch, val, scenario_params(get_scenario(name)))
+    assert rf._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# paper-scale loop + partition wiring
+# ---------------------------------------------------------------------------
+
+def test_paper_loop_downweights_label_flip_adversary():
+    from repro.configs.wssl_paper import GaitConfig
+    from repro.core import fairness
+    from repro.core.paper_loop import gait_adapter, train_wssl
+    from repro.data.partition import partition_for_scenario
+    from repro.data.pipeline import ClientLoader
+    from repro.data.synthetic import make_gait_like
+
+    data = make_gait_like(n=3000, seed=0)
+    tr = {k: v[:2200] for k, v in data.items()}
+    val = {k: v[2200:2600] for k, v in data.items()}
+    test = {k: v[2600:] for k, v in data.items()}
+    sc = get_scenario("label-flip-adversary")
+    parts = partition_for_scenario(tr["y"], 4, sc, seed=0)
+    loaders = [ClientLoader({"x": tr["x"], "y": tr["y"]}, p, 64, seed=i)
+               for i, p in enumerate(parts)]
+    h = train_wssl(gait_adapter(GaitConfig()), loaders, val, test,
+                   WSSLConfig(num_clients=4, participation_fraction=1.0),
+                   rounds=5, local_steps=8, lr=2e-3, scenario=sc)
+    rep = fairness.importance_gap(h["importance"][-1], sc.adversary_ids(4))
+    assert rep["downweighted"], rep
+    assert h["scenario"] == "label-flip-adversary"
+
+
+def test_importance_gap_cohort_edges():
+    from repro.core.fairness import importance_gap
+    imp = [0.1, 0.2, 0.3, 0.4]
+    rep = importance_gap(imp, [0])
+    assert rep["corrupt_mean"] == 0.1 and rep["downweighted"]
+    none = importance_gap(imp, [])
+    assert np.isnan(none["corrupt_mean"]) and not none["downweighted"]
+    everyone = importance_gap(imp, [0, 1, 2, 3])
+    assert everyone["corrupt_mean"] == pytest.approx(0.25)
+    assert np.isnan(everyone["clean_mean"]) and not everyone["downweighted"]
+
+
+def test_partition_for_scenario_dispatch():
+    from repro.data import partition
+    labels = np.random.default_rng(0).integers(0, 10, size=2000)
+    flat = partition.partition_for_scenario(labels, 4, get_scenario("clean"))
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p) for p in flat]).size, 2000)
+    # clean == stratified; skewed == dirichlet (visibly non-IID)
+    stds_flat = [np.bincount(labels[p], minlength=10).std() for p in flat]
+    skew = partition.partition_for_scenario(
+        labels, 4, get_scenario("noniid-dirichlet"))
+    stds_skew = [np.bincount(labels[p], minlength=10).std() for p in skew]
+    assert np.mean(stds_skew) > 2 * np.mean(stds_flat)

@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.data import partition, synthetic
 from repro.data.pipeline import ClientLoader, stacked_client_batch

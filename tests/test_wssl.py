@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.config import WSSLConfig
 from repro.core import wssl
@@ -118,3 +118,72 @@ def test_round0_selects_everyone():
                                     jnp.full((6,), 1 / 6), cfg,
                                     round_index=0)
     assert float(mask.sum()) == 6.0
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(6))
+
+
+# ---------------------------------------------------------------------------
+# wssl invariants (property coverage)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 1000),
+       agg=st.sampled_from(["importance", "uniform"]))
+def test_aggregation_weights_sum_to_one_under_any_mask(n, seed, agg):
+    """Σ coefs == 1 and masked-out clients get exactly 0, for any nonempty
+    participation mask and either aggregation rule."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
+    m = rng.integers(0, 2, size=n)
+    m[rng.integers(0, n)] = 1          # at least one participant
+    mask = jnp.asarray(m, jnp.float32)
+    cfg = WSSLConfig(num_clients=n, aggregation=agg)
+    coefs = wssl.aggregation_weights(w, mask, cfg)
+    assert abs(float(coefs.sum()) - 1.0) < 1e-5
+    assert (np.asarray(coefs)[m == 0] == 0).all()
+    assert float(coefs.min()) >= 0
+
+
+def test_safe_aggregation_weights_empty_mask_fallback():
+    """An all-dropped round must fall back to importance over all clients
+    (a no-op sync), never to all-zero coefficients."""
+    cfg = WSSLConfig(num_clients=4)
+    w = jnp.asarray([0.4, 0.3, 0.2, 0.1])
+    empty = jnp.zeros((4,))
+    coefs = wssl.safe_aggregation_weights(w, empty, cfg)
+    np.testing.assert_allclose(np.asarray(coefs), np.asarray(w), rtol=1e-5)
+    # nonempty mask: identical to the plain rule
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    np.testing.assert_array_equal(
+        np.asarray(wssl.safe_aggregation_weights(w, mask, cfg)),
+        np.asarray(wssl.aggregation_weights(w, mask, cfg)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 16), seed=st.integers(0, 1000))
+def test_weighted_sample_k_distinct_in_range(n, seed):
+    """weighted_sample returns exactly k distinct indices in [0, n) for any
+    positive weight vector and any k ≤ n."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.random(n) + 1e-3, jnp.float32)
+    k = int(rng.integers(1, n + 1))
+    idx = np.asarray(wssl.weighted_sample(jax.random.PRNGKey(seed), w, k))
+    assert idx.shape == (k,)
+    assert len(set(idx.tolist())) == k
+    assert (idx >= 0).all() and (idx < n).all()
+
+
+def test_interpolate_alpha_one_equals_broadcast():
+    rng = np.random.default_rng(3)
+    stacked = {"w": jnp.asarray(rng.normal(size=(4, 5, 3)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(4, 7)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(5, 3)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(7,)), jnp.float32)}
+    full = wssl.interpolate_to_global(stacked, g, alpha=1.0)
+    sync = wssl.broadcast_global(stacked, g)
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(sync)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # alpha=0 keeps every client stage untouched
+    keep = wssl.interpolate_to_global(stacked, g, alpha=0.0)
+    for a, b in zip(jax.tree.leaves(keep), jax.tree.leaves(stacked)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
