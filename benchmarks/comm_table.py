@@ -1,6 +1,8 @@
 """Paper §III-E ("Efficiency in Communication"): bytes moved per round for
 WSSL split learning vs federated learning vs centralized raw upload, across
-client counts and both paper models + one LLM-scale arch."""
+client counts and both paper models + one LLM-scale arch — including the
+client-stage sync traffic (aggregation upload + global broadcast) and the
+per-hop table for multi-hop (client→edge→server) pipelines."""
 
 from __future__ import annotations
 
@@ -29,12 +31,14 @@ def main(fast: bool = False) -> List[str]:
     model_bytes = client_bytes + protocol.tree_bytes(sp)
     for nc in (2, 10):
         sel = max(int(nc * 0.5), 1)
-        split = protocol.split_round_bytes(sel, gait.batch_size, 1, cut_dim,
-                                           4, client_bytes)
+        split = protocol.split_round_bytes(
+            sel, gait.batch_size, 1, cut_dim, 4,
+            protocol.sync_round_bytes(sel, nc, client_bytes))
         fed = protocol.federated_round_bytes(sel, model_bytes)
         lines.append(
             f"comm_gait_{nc}clients,0,"
             f"split_up_down_MB={(split['up'] + split['down'])/1e6:.3f};"
+            f"sync_MB={split['sync']/1e6:.3f};"
             f"federated_MB={fed/1e6:.3f}")
     cent = protocol.centralized_upload_bytes(2_803_999, 28 * 4)
     lines.append(f"comm_gait_centralized_raw,0,one_off_GB={cent/1e9:.2f}")
@@ -45,9 +49,11 @@ def main(fast: bool = False) -> List[str]:
     cpr, spr = pm.resnet_init_split(rng, cifar)
     rb = protocol.tree_bytes(cpr)
     mb = rb + protocol.tree_bytes(spr)
-    split = protocol.split_round_bytes(5, cifar.batch_size, 1, act_elems, 4, rb)
+    split = protocol.split_round_bytes(5, cifar.batch_size, 1, act_elems, 4,
+                                       protocol.sync_round_bytes(5, 10, rb))
     fed = protocol.federated_round_bytes(5, mb)
     lines.append(f"comm_cifar_5of10,0,split_MB={(split['up']+split['down'])/1e6:.2f};"
+                 f"sync_MB={split['sync']/1e6:.2f};"
                  f"federated_MB={fed/1e6:.2f};ratio={fed/max(split['up']+split['down'],1):.2f}")
 
     # LLM-scale: gemma3-12b train_4k cut activation per round
@@ -55,13 +61,38 @@ def main(fast: bool = False) -> List[str]:
     w = WSSLConfig(num_clients=16)
     cut = w.resolve_split(cfg)
     b_per_client = 256 // 16
-    act = protocol.split_round_bytes(8, b_per_client, 4096, cfg.d_model, 2, 0)
     client_stage_params = cfg.vocab_size * cfg.d_model + cut * (
         cfg.param_count() - 2 * cfg.vocab_size * cfg.d_model) // cfg.num_layers
+    act = protocol.split_round_bytes(
+        8, b_per_client, 4096, cfg.d_model, 2,
+        protocol.sync_round_bytes(8, 16, client_stage_params * 2))
     fed = protocol.federated_round_bytes(8, client_stage_params * 2)
     lines.append(
         f"comm_gemma3_train4k,0,split_act_GB={(act['up']+act['down'])/1e9:.2f};"
+        f"sync_GB={act['sync']/1e9:.2f};"
         f"federated_clientstage_GB={fed/1e9:.2f};cut_layer={cut}")
+
+    # multi-hop: client→edge→server and a 4-stage pipeline on gemma3-12b.
+    # Every transformer cut crosses a (b, s, d_model) activation, so the
+    # per-hop rows are equal here; heterogeneous stage widths would show up
+    # per column.  WAN cost scales with the number of hop crossings.
+    period = cfg.period
+    for tag, cuts in (("3stage", (period, 2 * period)),
+                      ("4stage", (period, 2 * period, 3 * period))):
+        mh_cfg = WSSLConfig(num_clients=16, split_layers=cuts)
+        resolved = mh_cfg.resolve_cuts(cfg)
+        mh_client_params = cfg.vocab_size * cfg.d_model + resolved[0] * (
+            cfg.param_count() - 2 * cfg.vocab_size * cfg.d_model
+        ) // cfg.num_layers
+        mh = protocol.multihop_round_bytes(
+            8, b_per_client, 4096, [cfg.d_model] * len(resolved), 2,
+            protocol.sync_round_bytes(8, 16, mh_client_params * 2))
+        hops = ";".join(f"hop{i}_GB={b/1e9:.2f}"
+                        for i, b in enumerate(mh["per_hop"]))
+        lines.append(
+            f"comm_gemma3_multihop_{tag},0,{hops};"
+            f"total_up_down_GB={(mh['up']+mh['down'])/1e9:.2f};"
+            f"cuts={'-'.join(str(c) for c in resolved)}")
     per = (time.time() - t0) * 1e6 / max(len(lines), 1)
     return [l.replace(",0,", f",{per:.0f},", 1) for l in lines]
 

@@ -10,6 +10,7 @@ count is printed and checked at the end.
   PYTHONPATH=src python benchmarks/robustness.py --scenario label-flip-adversary --reduced
   PYTHONPATH=src python benchmarks/robustness.py --reduced            # full sweep
   PYTHONPATH=src python benchmarks/robustness.py --paper --reduced    # gait paper loop
+  PYTHONPATH=src python benchmarks/robustness.py --reduced --cuts 1,2 # 3-stage pipeline
 
 Data heterogeneity: scenarios with ``skew_alpha`` set draw each client's
 token stream from a client-specific Markov mixture (fused mode) or a
@@ -57,9 +58,21 @@ def run_fused(args) -> int:
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    cuts = None
+    if args.cuts:
+        # --cuts counts super-blocks, so the same spelling works for every
+        # arch (period-1 stacks: super-block == layer)
+        cuts = tuple(int(c) * cfg.period for c in args.cuts.split(","))
+        if cuts[-1] >= cfg.num_layers:
+            # deepen the reduced model enough for the requested pipeline
+            cfg = cfg.replace(num_layers=cuts[-1] + cfg.period)
     n, b, s = args.clients, args.batch, args.seq
     w = WSSLConfig(num_clients=n, participation_fraction=1.0,
-                   importance_temp=0.1, importance_ema=0.8)
+                   importance_temp=0.1, importance_ema=0.8,
+                   split_layers=cuts, hop_replicas=args.hop_replicas)
+    print(f"pipeline: cuts={w.resolve_cuts(cfg)} "
+          f"({len(w.resolve_cuts(cfg)) + 1} stages, "
+          f"{args.hop_replicas} replica(s)/hop)")
     t = TrainConfig(remat=False, learning_rate=3e-3, warmup_steps=0,
                     schedule="constant")
     rf = jax.jit(make_round_fn(cfg, w, t, impl="dense"))
@@ -165,6 +178,12 @@ def main(argv=None) -> int:
     p.add_argument("--batch", type=int, default=8, help="fused mode only")
     p.add_argument("--seq", type=int, default=32, help="fused mode only")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--cuts", default=None,
+                   help="comma-separated cut positions in super-blocks for "
+                        "a multi-hop pipeline, e.g. --cuts 1,2 "
+                        "(fused mode only)")
+    p.add_argument("--hop-replicas", type=int, default=2,
+                   help="fault-domain replicas per edge hop")
     p.add_argument("--reduced", action="store_true",
                    help="tiny same-family model (CPU-runnable)")
     p.add_argument("--paper", action="store_true",

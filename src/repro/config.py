@@ -240,14 +240,26 @@ class WSSLConfig:
     # server stage = layers[split_layer:] + final norm + head.
     # None -> max(period, num_layers // 4) rounded to a super-block boundary.
     split_layer: Optional[int] = None
+    # multi-hop pipeline: strictly increasing cut layer indices.  Length 1
+    # reproduces the classic client→server protocol; length 2 is
+    # client→edge→server, etc.  Overrides split_layer when set.
+    split_layers: Optional[Tuple[int, ...]] = None
+    # fault-domain replicas per intermediate (edge) hop: client i routes
+    # through replica i mod hop_replicas at every edge stage.  Replicas hold
+    # identical synced params, so this is purely a fault/accounting topology
+    # knob — a dead replica masks exactly its routed clients (repro.sim).
+    hop_replicas: int = 1
     # "fraction": select max(round(N * participation_fraction), 1) clients.
     # "literal":  the paper's Algorithm 1 line 9 (degenerate: always 1).
     selection_rule: str = "fraction"
     participation_fraction: float = 0.5
     importance_temp: float = 1.0      # softmax temperature over -val_loss
     importance_ema: float = 0.5       # EMA decay ("stability of weights")
-    # aggregation weight source: "importance" (paper) or "uniform" (ablation)
+    # aggregation rule: "importance" (paper), "uniform" (ablation), or
+    # "trimmed_mean" (Byzantine-robust coordinate-wise trimmed mean)
     aggregation: str = "importance"
+    # fraction trimmed from each tail of the client axis (trimmed_mean only)
+    trim_fraction: float = 0.1
     seed: int = 0
 
     def resolve_split(self, model: ModelConfig) -> int:
@@ -255,10 +267,38 @@ class WSSLConfig:
         front-end) — at most 4 super-blocks and at most L/4 layers."""
         if self.split_layer is not None:
             return self.split_layer
-        period = _lcm(len(model.pattern), len(model.mlp_pattern))
+        period = model.period
         quarter = (model.num_layers // 4) // period * period
         cut = max(period, min(4 * period, quarter))
         return min(cut, model.num_layers - period)
+
+    def resolve_cuts(self, model: ModelConfig) -> Tuple[int, ...]:
+        """The pipeline's cut layers as a strictly increasing tuple.
+
+        A length-1 tuple reproduces the classic two-stage protocol
+        bit-for-bit; ``split_layers=(c1, c2)`` is client→edge→server.
+        Every cut must sit on a super-block boundary (``model.period``) in
+        [0, num_layers]: cut 0 leaves the client only the embedding, and a
+        cut at num_layers leaves the server only its remainder layers +
+        final norm + head."""
+        if self.split_layers is None:
+            return (self.resolve_split(model),)
+        cuts = tuple(int(c) for c in self.split_layers)
+        if not cuts:
+            raise ValueError("split_layers must name at least one cut")
+        prev = -1
+        for c in cuts:
+            if c % model.period:
+                raise ValueError(f"cut {c} must align to the super-block "
+                                 f"period {model.period}")
+            if not prev < c:
+                raise ValueError(f"cuts must be strictly increasing: {cuts}")
+            prev = c
+        if cuts[-1] > model.num_layers:
+            raise ValueError(
+                f"last cut {cuts[-1]} exceeds num_layers "
+                f"({model.num_layers})")
+        return cuts
 
     def num_selected(self, norm_weights=None) -> int:
         if self.selection_rule == "literal":
@@ -299,6 +339,19 @@ class Scenario:
     # client-stage gradient.
     gradient_noise_fraction: float = 0.0
     gradient_noise_scale: float = 0.0
+    # Byzantine adversaries (lowest indices): sign-flipped client-stage
+    # gradients, or gradients scaled by a constant factor (model-poisoning
+    # amplification when >1).
+    sign_flip_fraction: float = 0.0
+    grad_scale_fraction: float = 0.0
+    grad_scale_factor: float = 1.0
+    # per-hop faults (multi-hop pipelines): each edge-hop replica
+    # independently dies for the round with hop_dropout_prob (masking the
+    # clients routed through it), or straggles with hop_latency_prob at
+    # hop_latency_slowdown (composing into those clients' update scale).
+    hop_dropout_prob: float = 0.0
+    hop_latency_prob: float = 0.0
+    hop_latency_slowdown: float = 1.0
     # partition-time label skew (Dirichlet alpha); None = stratified/IID.
     skew_alpha: Optional[float] = None
     seed: int = 0
@@ -316,11 +369,21 @@ class Scenario:
         return list(range(self._cohort_size(self.gradient_noise_fraction,
                                             num_clients)))
 
+    def sign_flip_ids(self, num_clients: int) -> List[int]:
+        return list(range(self._cohort_size(self.sign_flip_fraction,
+                                            num_clients)))
+
+    def grad_scale_ids(self, num_clients: int) -> List[int]:
+        return list(range(self._cohort_size(self.grad_scale_fraction,
+                                            num_clients)))
+
     def adversary_ids(self, num_clients: int) -> List[int]:
-        """Union of the corrupted cohorts (both are index prefixes), for
+        """Union of the corrupted cohorts (all are index prefixes), for
         reporting; each fault applies only to its own cohort."""
         k = self._cohort_size(max(self.label_flip_fraction,
-                                  self.gradient_noise_fraction), num_clients)
+                                  self.gradient_noise_fraction,
+                                  self.sign_flip_fraction,
+                                  self.grad_scale_fraction), num_clients)
         return list(range(k))
 
     def straggler_ids(self, num_clients: int) -> List[int]:
@@ -331,6 +394,10 @@ class Scenario:
         return (self.dropout_prob == 0.0 and self.straggler_fraction == 0.0
                 and self.label_flip_fraction == 0.0
                 and self.gradient_noise_scale == 0.0
+                and self.sign_flip_fraction == 0.0
+                and self.grad_scale_fraction == 0.0
+                and self.hop_dropout_prob == 0.0
+                and self.hop_latency_prob == 0.0
                 and self.skew_alpha is None)
 
     def replace(self, **kw) -> "Scenario":

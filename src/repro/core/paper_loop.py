@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import Scenario, WSSLConfig
-from repro.core import wssl
+from repro.core import protocol, wssl
 from repro.core.split import split_grads
 from repro.data.pipeline import ClientLoader
 from repro.optim import adamw_init, adamw_update
@@ -76,9 +76,9 @@ def resnet_adapter(cfg) -> ModelAdapter:
 
 
 def _make_split_step(adapter: ModelAdapter, lr: float):
-    @functools.partial(jax.jit, static_argnames=("noise_sigma",))
+    @functools.partial(jax.jit, static_argnames=("noise_sigma", "sign_flip"))
     def step(client_params, server_params, opt_c, opt_s, x, y,
-             noise_rng, noise_sigma=0.0):
+             noise_rng, noise_sigma=0.0, sign_flip=False):
         def client_fn(cp):
             return adapter.client_apply(cp, x)
 
@@ -88,8 +88,10 @@ def _make_split_step(adapter: ModelAdapter, lr: float):
         res = split_grads(client_fn, server_loss_fn, client_params,
                           server_params)
         g_client = res.grads_client
-        # scenario gradient-noise fault (repro.sim); sigma is static so the
-        # clean trace carries no noise ops (at most 2 traces per scale)
+        # scenario faults (repro.sim); the knobs are static so the clean
+        # trace carries no fault ops (a few traces per scale at most)
+        if sign_flip:
+            g_client = jax.tree.map(jnp.negative, g_client)
         if noise_sigma:
             from repro.sim.faults import add_gradient_noise
             g_client = add_gradient_noise(g_client, noise_rng, noise_sigma)
@@ -144,6 +146,8 @@ def train_wssl(adapter: ModelAdapter,
     sc = scenario if scenario is not None else Scenario()
     flip_clients = set(sc.label_flip_ids(n))
     noisy_clients = set(sc.noise_ids(n))
+    sflip_clients = set(sc.sign_flip_ids(n))
+    scaled_clients = set(sc.grad_scale_ids(n))
     stragglers = set(sc.straggler_ids(n))
     fault_rng = np.random.default_rng(sc.seed + 7919 * seed + 1)
     noise_rng = jax.random.PRNGKey(sc.seed + 7919 * seed + 2)
@@ -158,24 +162,21 @@ def train_wssl(adapter: ModelAdapter,
     history: Dict[str, Any] = {"round": [], "test_acc": [], "test_loss": [],
                                "val_loss": [], "selected": [], "dropped": [],
                                "importance": [], "bytes_up": [],
-                               "scenario": sc.name}
+                               "bytes_sync": [], "scenario": sc.name}
     xv, yv = jnp.asarray(val["x"]), jnp.asarray(val["y"])
     xt, yt = jnp.asarray(test["x"]), jnp.asarray(test["y"])
 
     # cut-activation bytes per example (up) + same for the returned gradient
     probe = jax.eval_shape(lambda c: adapter.client_apply(c, xv[:1]), client0)
     act_bytes_per_example = int(np.prod(probe.shape[1:])) * probe.dtype.itemsize
+    client_stage_bytes = protocol.tree_bytes(client0)
+    comm = protocol.CommLog()
 
-    bytes_up_total = 0
     for r in range(rounds):
-        # ---- Algorithm 1: selection ----------------------------------
+        # ---- Algorithm 1: selection (round-0 rule lives in wssl) ------
         rng, sub = jax.random.split(rng)
-        if r == 0:
-            sel = list(range(n))
-        else:
-            k = wssl_cfg.num_selected()
-            sel = sorted(int(i) for i in np.asarray(
-                wssl.weighted_sample(sub, importance, k)))
+        idx, _ = wssl.select_clients(sub, importance, wssl_cfg, r)
+        sel = sorted(int(i) for i in np.asarray(idx))
         # transient failures: selected clients drop out of the round
         dropped = [i for i in sel
                    if fault_rng.random() < sc.dropout_prob]
@@ -186,6 +187,7 @@ def train_wssl(adapter: ModelAdapter,
         round_bytes = 0
         for i in sel:
             steps_i = strag_steps if i in stragglers else local_steps
+            start = clients[i]
             for s in range(steps_i):
                 b = loaders[i].next_batch()
                 x, y = jnp.asarray(b["x"]), jnp.asarray(b["y"])
@@ -196,9 +198,21 @@ def train_wssl(adapter: ModelAdapter,
                 key = jax.random.fold_in(noise_rng, r * 131071 + i * 521 + s)
                 clients[i], server, opt_clients[i], opt_server, loss = step(
                     clients[i], server, opt_clients[i], opt_server, x, y,
-                    key, noise_sigma=float(sigma))
+                    key, noise_sigma=float(sigma),
+                    sign_flip=i in sflip_clients)
                 round_bytes += act_bytes_per_example * x.shape[0] * 2
-        bytes_up_total += round_bytes
+            if i in scaled_clients and sc.grad_scale_factor != 1.0:
+                # scaled_gradient Byzantine amplification of the round's
+                # sent update (post-optimizer — a constant gradient scale
+                # is inert under Adam)
+                f = float(sc.grad_scale_factor)
+                clients[i] = jax.tree.map(
+                    lambda old, new: old + f * (new - old), start, clients[i])
+        sync_bytes = protocol.sync_round_bytes(len(sel), n,
+                                               client_stage_bytes)
+        comm.record(r, len(sel), bytes_up=round_bytes // 2,
+                    bytes_down=round_bytes // 2, bytes_sync=sync_bytes,
+                    bytes_per_hop=(round_bytes // 2,))
 
         # ---- validation → importance ----------------------------------
         val_losses = jnp.stack([evaluate(clients[i], server, xv, yv)[0]
@@ -224,9 +238,12 @@ def train_wssl(adapter: ModelAdapter,
         history["dropped"].append(dropped)
         history["importance"].append([float(v) for v in importance])
         history["bytes_up"].append(round_bytes)
+        history["bytes_sync"].append(sync_bytes)
 
     history["participation"] = participation.tolist()
-    history["bytes_up_total"] = bytes_up_total
+    history["bytes_up_total"] = sum(history["bytes_up"])
+    history["bytes_sync_total"] = sum(history["bytes_sync"])
+    history["comm"] = comm.summary()
     history["final_acc"] = history["test_acc"][-1]
     history["best_acc"] = max(history["test_acc"])
     return history

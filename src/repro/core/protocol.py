@@ -6,6 +6,8 @@ bytes e:
 
   split learning:  up = S·b·s·d·e (activations), down = same (gradients),
                    sync = client-stage params broadcast (if syncing)
+  multi-hop split: the same per *hop crossing* — an N-stage pipeline moves
+                   S·b·s·dᵢ·e across each of its cuts, both ways
   federated (for comparison): 2 · S · |client params| per round
   centralized:      one-off raw-data upload (the privacy non-starter)
 """
@@ -13,7 +15,7 @@ bytes e:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -31,6 +33,9 @@ class RoundComm:
     bytes_up: int
     bytes_down: int
     bytes_sync: int
+    # per hop crossing (client→edge₀, …, edge→server); () for untracked /
+    # classic single-cut logs, where bytes_up is the only crossing
+    bytes_per_hop: Tuple[int, ...] = ()
 
     @property
     def total(self) -> int:
@@ -42,24 +47,37 @@ class CommLog:
     rounds: List[RoundComm] = field(default_factory=list)
 
     def record(self, round_index: int, selected: int, bytes_up: int,
-               bytes_down: int, bytes_sync: int = 0) -> None:
+               bytes_down: int, bytes_sync: int = 0,
+               bytes_per_hop: Sequence[int] = ()) -> None:
         self.rounds.append(RoundComm(round_index, selected, int(bytes_up),
-                                     int(bytes_down), int(bytes_sync)))
+                                     int(bytes_down), int(bytes_sync),
+                                     tuple(int(b) for b in bytes_per_hop)))
 
     @property
     def total_bytes(self) -> int:
         return sum(r.total for r in self.rounds)
 
+    @property
+    def num_hops(self) -> int:
+        return max((len(r.bytes_per_hop) for r in self.rounds), default=0)
+
     def summary(self) -> Dict[str, float]:
         if not self.rounds:
             return {}
         ups = [r.bytes_up for r in self.rounds]
-        return {
+        out = {
             "rounds": len(self.rounds),
             "total_GB": self.total_bytes / 1e9,
             "mean_up_MB": float(np.mean(ups)) / 1e6,
+            "mean_sync_MB": float(np.mean([r.bytes_sync
+                                           for r in self.rounds])) / 1e6,
             "mean_selected": float(np.mean([r.selected for r in self.rounds])),
         }
+        for h in range(self.num_hops):
+            vals = [r.bytes_per_hop[h] for r in self.rounds
+                    if len(r.bytes_per_hop) > h]
+            out[f"mean_hop{h}_MB"] = float(np.mean(vals)) / 1e6
+        return out
 
 
 def split_round_bytes(selected: int, batch: int, seq: int, cut_dim: int,
@@ -69,6 +87,29 @@ def split_round_bytes(selected: int, batch: int, seq: int, cut_dim: int,
     return {
         "up": act,
         "down": act,
+        "sync": client_param_bytes if sync else 0,
+    }
+
+
+def sync_round_bytes(selected, num_clients, client_stage_bytes):
+    """Client-stage sync traffic per round: the ``selected`` participants
+    upload their stage for aggregation + the aggregated global stage is
+    broadcast back to all N clients.  Works with traced scalars (the fused
+    round calls it with a dynamic selection count)."""
+    return (selected + num_clients) * client_stage_bytes
+
+
+def multihop_round_bytes(selected: int, batch: int, seq: int,
+                         cut_dims: Sequence[int], itemsize: int,
+                         client_param_bytes: int = 0,
+                         sync: bool = True) -> Dict[str, Any]:
+    """Per-hop byte accounting for an N-stage pipeline: one entry per hop
+    crossing, activations up and gradients down each."""
+    per_hop = [selected * batch * seq * d * itemsize for d in cut_dims]
+    return {
+        "per_hop": per_hop,
+        "up": sum(per_hop),
+        "down": sum(per_hop),
         "sync": client_param_bytes if sync else 0,
     }
 

@@ -1,12 +1,20 @@
 """One fused WSSL communication round for the transformer stack.
 
 All of Algorithm 1 + Algorithm 2 as a single jit-able function over a fixed
-client axis:
+client axis, generalized to an N-stage split pipeline:
 
   importance → Gumbel-top-k selection mask → per-client split forward /
-  two-phase backward (client stages vmapped over the stacked client axis,
-  server stage shared) → masked optimizer step → per-client validation →
-  importance EMA update → weighted aggregation (+ optional client sync).
+  chained N-phase backward (client stages vmapped over the stacked client
+  axis, edge + server stages shared) → masked optimizer step → per-client
+  validation → importance EMA update → weighted aggregation (+ optional
+  client sync).
+
+The pipeline is ``client → edge₀ → … → edge_{H-1} → server``: stage 0 is
+replicated per client (leaves carry a leading (N, ...) axis), intermediate
+(edge) stages and the server stage are shared single copies that every
+client's activation flows through.  A length-1 cut tuple
+(``WSSLConfig.resolve_cuts``) has no edge stages and reproduces the classic
+two-stage protocol bit-for-bit.
 
 Unselected clients are *masked*, not removed — shapes stay static so one
 compiled executable serves every round, and on a TPU mesh each client group
@@ -23,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig, WSSLConfig
 from repro.core import wssl
+from repro.core.protocol import sync_round_bytes
 from repro.models import transformer as tf
 from repro.sim import faults as sim_faults
 from repro.optim import adamw_update, clip_by_global_norm, make_optimizer
@@ -34,8 +43,10 @@ Params = Any
 class WSSLState(NamedTuple):
     client_stack: Params          # client stages, leaves (N, ...)
     server_params: Params
+    edge_stages: Tuple[Params, ...]   # shared intermediate hops (may be ())
     opt_client: Any
     opt_server: Any
+    opt_edge: Tuple[Any, ...]
     importance: jax.Array         # (N,) normalized
     round_index: jax.Array        # int32
     rng: jax.Array
@@ -47,22 +58,28 @@ class RoundMetrics(NamedTuple):
     val_loss: jax.Array           # (N,) validation loss per client
     mask: jax.Array               # (N,) participation
     importance: jax.Array         # (N,) post-update weights
-    bytes_up: jax.Array
-    bytes_down: jax.Array
+    bytes_up: jax.Array           # total activation bytes over all hops
+    bytes_down: jax.Array         # total returned-gradient bytes
+    bytes_per_hop: jax.Array      # (num_hops,) activation bytes per crossing
+    bytes_sync: jax.Array         # client-stage aggregation + broadcast
 
 
 def init_state(rng, model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
                train_cfg: TrainConfig) -> Tuple[WSSLState, WSSLState]:
-    """Initialize N client stages (identical start) + server stage.
+    """Initialize N client stages (identical start) + edge/server stages.
 
     Returns (state, state_axes) where state_axes mirrors the state with
     logical sharding-axis tuples at the leaves (client-stage leaves get a
     leading "client" axis).
     """
-    cut = wssl_cfg.resolve_split(model_cfg)
+    cuts = wssl_cfg.resolve_cuts(model_cfg)
     params, axes = tf.init_params(rng, model_cfg)
-    client, server = tf.split_params(params, model_cfg, cut)
-    client_axes, server_axes = tf.split_axes(axes, model_cfg, cut)
+    stages = tf.partition_params(params, model_cfg, cuts)
+    stage_axes = tf.partition_axes(axes, model_cfg, cuts)
+    client, server = stages[0], stages[-1]
+    edge = tuple(stages[1:-1])
+    client_axes, server_axes = stage_axes[0], stage_axes[-1]
+    edge_axes = tuple(stage_axes[1:-1])
     n = wssl_cfg.num_clients
     client_stack = jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), client)
@@ -85,8 +102,10 @@ def init_state(rng, model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
     state = WSSLState(
         client_stack=client_stack,
         server_params=server,
+        edge_stages=edge,
         opt_client=opt_init(client_stack),
         opt_server=opt_init(server),
+        opt_edge=tuple(opt_init(e) for e in edge),
         importance=jnp.full((n,), 1.0 / n, jnp.float32),
         round_index=jnp.zeros((), jnp.int32),
         rng=jax.random.fold_in(rng, 1),
@@ -94,8 +113,10 @@ def init_state(rng, model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
     state_axes = WSSLState(
         client_stack=stacked_axes,
         server_params=server_axes,
+        edge_stages=edge_axes,
         opt_client=opt_axes(stacked_axes),
         opt_server=opt_axes(server_axes),
+        opt_edge=tuple(opt_axes(a) for a in edge_axes),
         importance=(None,),
         round_index=(),
         rng=(),
@@ -131,11 +152,11 @@ def _client_spmd_axes():
     return axes[0] if len(axes) == 1 else axes
 
 
-def _client_vmap(fn):
+def _client_vmap(fn, in_axes=0):
     spmd = _client_spmd_axes()
     if spmd is None:
-        return jax.vmap(fn)
-    return jax.vmap(fn, spmd_axis_name=spmd)
+        return jax.vmap(fn, in_axes=in_axes)
+    return jax.vmap(fn, in_axes=in_axes, spmd_axis_name=spmd)
 
 
 def _per_client_losses(cfg: ModelConfig, server_params: Params,
@@ -154,6 +175,12 @@ def _per_client_losses(cfg: ModelConfig, server_params: Params,
     return losses, auxes.mean()
 
 
+def _client_stage_bytes(client_stack: Params, n: int) -> int:
+    """Static: bytes of ONE client's stage (the sync/aggregation payload)."""
+    return sum((l.size // n) * l.dtype.itemsize
+               for l in jax.tree.leaves(client_stack))
+
+
 def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
                val_batch: Optional[Dict[str, jax.Array]] = None,
                scenario: Optional["sim_faults.ScenarioParams"] = None, *,
@@ -167,28 +194,30 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
     launcher runs the validation step at a lower cadence).
 
     scenario: optional dynamic ScenarioParams (repro.sim) — dropped clients
-    compose into the selection mask as zeros, adversarial clients get
-    label/gradient corruption under jnp.where, stragglers contribute a
-    scaled gradient.  Shapes never change and the params are traced scalars,
+    (and clients routed through dead edge-hop replicas) compose into the
+    selection mask as zeros, adversarial clients get label/gradient
+    corruption under jnp.where, stragglers and slow hops contribute a
+    scaled update.  Shapes never change and the params are traced scalars,
     so one compiled executable serves every same-shape scenario.  The fault
     rngs are fold_in-derived, leaving the selection stream and the carried
     state rng untouched — the all-zero (clean) params reproduce the
     fault-free round bit-for-bit."""
     n = wssl_cfg.num_clients
     remat = train_cfg.remat
+    num_edges = len(state.edge_stages)
     rng, rng_sel = jax.random.split(state.rng)
 
-    # ---- Algorithm 1: selection --------------------------------------
-    k = wssl_cfg.num_selected()
-    idx = wssl.weighted_sample(rng_sel, state.importance, k)
-    mask = wssl.selection_mask(idx, n)
-    mask = jnp.where(state.round_index == 0, jnp.ones_like(mask), mask)
+    # ---- Algorithm 1: selection (round 0 selects everyone — the rule
+    # lives in wssl.participation_mask) --------------------------------
+    mask = wssl.participation_mask(rng_sel, state.importance, wssl_cfg,
+                                   state.round_index)
 
     # ---- fault injection (repro.sim): dropout ⇒ zero-mask ---------------
     plan = None
     if scenario is not None:
         plan = sim_faults.sample_fault_plan(
-            jax.random.fold_in(rng_sel, 0x0DD), scenario, n)
+            jax.random.fold_in(rng_sel, 0x0DD), scenario, n,
+            num_hops=num_edges, hop_replicas=wssl_cfg.hop_replicas)
         mask = mask * plan.keep
 
     agg_w = wssl.aggregation_weights(state.importance, mask, wssl_cfg)
@@ -199,7 +228,7 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
         labels = sim_faults.corrupt_labels(plan, labels, model_cfg.vocab_size)
     embeds = batch.get("embeds")
 
-    # ---- Algorithm 2 steps 2-4: split fwd / two-phase backward --------
+    # ---- Algorithm 2 steps 2-4: split fwd / chained N-phase backward ----
     span = train_cfg.remat_span
 
     def client_fn(cstack):
@@ -212,6 +241,27 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
 
     acts, client_vjp = jax.vjp(client_fn, state.client_stack)
     acts = shard_activation(acts, "client", None, None, None)
+    hop_bytes = [acts.size // n * acts.dtype.itemsize]
+
+    # forward relay through the shared edge stages (per-client activations,
+    # shared params: vmap over the client axis with in_axes=None params).
+    # Each edge stage also reports its MoE aux loss so the objective stays
+    # invariant to where the cuts sit.
+    x, edge_vjps = acts, []
+    edge_aux = jnp.zeros((), jnp.float32)
+    for j in range(num_edges):
+        def edge_fn(p, a, j=j):
+            return _client_vmap(
+                lambda pi, ai: tf.stage_forward(pi, model_cfg, ai, j + 1,
+                                                impl=impl, remat=remat,
+                                                remat_span=span,
+                                                with_aux=True),
+                in_axes=(None, 0))(p, a)
+        (x, aux_j), vjp = jax.vjp(edge_fn, state.edge_stages[j], x)
+        x = shard_activation(x, "client", None, None, None)
+        edge_aux = edge_aux + aux_j.mean()
+        edge_vjps.append(vjp)
+        hop_bytes.append(x.size // n * x.dtype.itemsize)
 
     def server_loss(sp, a):
         losses, aux = _per_client_losses(model_cfg, sp, a, labels, impl,
@@ -219,17 +269,29 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
         total = jnp.sum(agg_w * mask * losses) + aux
         return total, losses
 
-    (loss, pcl), (g_server, g_acts) = jax.value_and_grad(
-        server_loss, argnums=(0, 1), has_aux=True)(state.server_params, acts)
-    (g_client,) = client_vjp(g_acts)
+    (loss, pcl), (g_server, g_x) = jax.value_and_grad(
+        server_loss, argnums=(0, 1), has_aux=True)(state.server_params, x)
+    loss = loss + edge_aux
+
+    # backward relay: inject each hop's cotangent upstream (the mean-aux
+    # term contributes 1/N per client alongside the activation cotangent)
+    aux_ct = jnp.full((n,), 1.0 / n, jnp.float32)
+    g_edges = []
+    for vjp in reversed(edge_vjps):
+        g_e, g_x = vjp((g_x, aux_ct))
+        g_edges.append(g_e)
+    g_edges.reverse()
+    (g_client,) = client_vjp(g_x)
 
     if train_cfg.grad_clip:
         g_client, _ = clip_by_global_norm(g_client, train_cfg.grad_clip)
         g_server, _ = clip_by_global_norm(g_server, train_cfg.grad_clip)
+        g_edges = [clip_by_global_norm(g, train_cfg.grad_clip)[0]
+                   for g in g_edges]
 
     if plan is not None:
-        # adversarial noise models corruption of the *sent* client update,
-        # so it applies after the shared global-norm clip — otherwise one
+        # adversarial corruption models the *sent* client update, so it
+        # applies after the shared global-norm clip — otherwise one
         # adversary's noise inflates the joint norm and attenuates every
         # clean client's gradient through the clip factor
         g_client = sim_faults.corrupt_client_grads(
@@ -244,19 +306,32 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
     new_server, new_opt_s = opt_update(
         state.server_params, g_server, state.opt_server, lr=lr,
         weight_decay=train_cfg.weight_decay)
+    new_edges, new_opt_e = [], []
+    for ep, ge, oe in zip(state.edge_stages, g_edges, state.opt_edge):
+        ne, no = opt_update(ep, ge, oe, lr=lr,
+                            weight_decay=train_cfg.weight_decay)
+        new_edges.append(ne)
+        new_opt_e.append(no)
     if plan is not None:
-        # straggler partial progress on the post-optimizer update (a
-        # constant gradient scale would be inert under Adam)
+        # straggler / slow-hop partial progress and Byzantine amplification
+        # on the post-optimizer update (a constant gradient scale would be
+        # inert under Adam)
         new_cstack = sim_faults.scale_client_updates(plan, new_cstack,
                                                      state.client_stack)
-        # an all-dropped round must leave the server untouched too: with no
-        # participants the CE term is zero but the aux term and weight decay
-        # would still step (and decay) the server stage every empty round
+        # an all-dropped round must leave the shared stages untouched too:
+        # with no participants the CE term is zero but the aux term and
+        # weight decay would still step (and decay) them every empty round
         alive = mask.sum() > 0
         keep_old = lambda new, old: jax.tree.map(
             lambda a, b: jnp.where(alive, a, b), new, old)
         new_server = keep_old(new_server, state.server_params)
         new_opt_s = keep_old(new_opt_s, state.opt_server)
+        new_edges = [keep_old(ne, oe)
+                     for ne, oe in zip(new_edges, state.edge_stages)]
+        new_opt_e = [keep_old(no, oo)
+                     for no, oo in zip(new_opt_e, state.opt_edge)]
+    new_edges = tuple(new_edges)
+    new_opt_e = tuple(new_opt_e)
 
     # ---- validation on the server-held ζ → importance ------------------
     if val_batch is not None:
@@ -264,6 +339,9 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
 
         def val_one(cp):
             a = tf.client_forward(cp, model_cfg, vt, impl=impl, remat=remat)
+            for j in range(num_edges):
+                a = tf.stage_forward(new_edges[j], model_cfg, a, j + 1,
+                                     impl=impl, remat=remat)
             loss, _ = tf.server_loss(new_server, model_cfg, a, vl,
                                      impl=impl, remat=remat)
             return loss
@@ -276,26 +354,28 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
         importance = state.importance
 
     # ---- Algorithm 2 step 5: weighted aggregation + sync ----------------
-    if plan is not None:
-        # dropout can empty the selection; fall back to a no-op sync
-        agg_final = wssl.safe_aggregation_weights(importance, mask, wssl_cfg)
-    else:
-        agg_final = wssl.aggregation_weights(importance, mask, wssl_cfg)
-    global_client = wssl.weighted_average(new_cstack, agg_final)
+    # (dropout can empty the selection; `safe` falls back to a no-op sync)
+    global_client = wssl.aggregate_clients(new_cstack, importance, mask,
+                                           wssl_cfg, safe=plan is not None)
     new_cstack = wssl.broadcast_global(new_cstack, global_client)
 
     # ---- communication accounting --------------------------------------
-    act_bytes = jnp.asarray(acts.size // n * acts.dtype.itemsize, jnp.float32)
     sel = mask.sum()
+    bytes_per_hop = sel * jnp.asarray(hop_bytes, jnp.float32)
+    stage_bytes = jnp.asarray(_client_stage_bytes(state.client_stack, n),
+                              jnp.float32)
     metrics = RoundMetrics(
         loss=loss, per_client_loss=pcl * mask, val_loss=val_losses,
         mask=mask, importance=importance,
-        bytes_up=sel * act_bytes, bytes_down=sel * act_bytes,
+        bytes_up=bytes_per_hop.sum(), bytes_down=bytes_per_hop.sum(),
+        bytes_per_hop=bytes_per_hop,
+        bytes_sync=sync_round_bytes(sel, n, stage_bytes),
     )
     new_state = WSSLState(
         client_stack=new_cstack, server_params=new_server,
-        opt_client=new_opt_c, opt_server=new_opt_s,
-        importance=importance, round_index=state.round_index + 1, rng=rng)
+        edge_stages=new_edges, opt_client=new_opt_c, opt_server=new_opt_s,
+        opt_edge=new_opt_e, importance=importance,
+        round_index=state.round_index + 1, rng=rng)
     return new_state, metrics
 
 

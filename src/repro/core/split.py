@@ -1,25 +1,33 @@
-"""Algorithm 2's dual-backprop split step, as explicit two-phase VJP.
+"""Algorithm 2's dual-backprop split step, generalized to an N-stage
+pipeline of explicit chained VJPs.
 
-``split_grads`` is the paper's protocol, verbatim:
+``pipeline_grads`` is the multi-hop protocol (client → edge… → server):
 
-  1. client forward  → intermediate activation a   (the "upload")
-  2. server forward + backward → loss, ∂L/∂a        (the "download")
-  3. client backward with the injected cotangent
+  1. stage 0 forward          → hop activation a₀       (first "upload")
+  2. stage i forward (0<i<S-1) → hop activation aᵢ      (relayed upload)
+  3. final stage forward + backward → loss, ∂L/∂a_{S-2} (first "download")
+  4. each stage's backward with the injected cotangent, in reverse
 
 It is numerically identical to end-to-end ``jax.grad`` (property-tested in
-tests/test_split.py) — the protocol changes *where* compute happens, not the
-math.  ``bytes_up`` / ``bytes_down`` feed the communication accounting
+tests/test_split.py for 1, 2, and 3 cuts) — the protocol changes *where*
+compute happens, not the math.  ``split_grads`` is the paper's classic
+two-stage protocol, now the S=2 special case.  The per-hop
+``bytes_up`` / ``bytes_down`` feed the communication accounting
 (core/protocol.py).
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Params = Any
+
+
+def _nbytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
 
 
 class SplitStepResult(NamedTuple):
@@ -31,44 +39,103 @@ class SplitStepResult(NamedTuple):
     bytes_down: int
 
 
+class PipelineStepResult(NamedTuple):
+    loss: jax.Array
+    grads: Tuple[Params, ...]         # per stage, client-first
+    activations: Tuple[jax.Array, ...]  # what crossed each hop (S-1 entries)
+    bytes_up: Tuple[int, ...]         # per-hop activation bytes
+    bytes_down: Tuple[int, ...]       # per-hop returned-gradient bytes
+
+
+def pipeline_grads(stage_fns: Sequence[Callable],
+                   stage_params: Sequence[Params]) -> PipelineStepResult:
+    """One N-stage split-learning fwd/bwd (chained two-phase VJPs).
+
+    ``stage_fns[0](params) -> activation`` (the stage's data is closed over —
+    it never appears downstream, which sees only the activation);
+    ``stage_fns[i](params, activation) -> activation`` for 0 < i < S-1;
+    ``stage_fns[-1](params, activation) -> scalar loss``.
+
+    Each hop's activation enters the next stage as a *leaf* input: exactly
+    the paper's "detach from computation graph and forward", applied at
+    every boundary.  The returned cotangent chain is the reverse path.
+    """
+    assert len(stage_fns) == len(stage_params) >= 2, \
+        "need at least a client and a server stage"
+
+    # Phase 1 — forward relay (Algorithm 2 step 2, per hop)
+    x, vjp0 = jax.vjp(stage_fns[0], stage_params[0])
+    acts, mid_vjps = [x], []
+    for fn, p in zip(stage_fns[1:-1], stage_params[1:-1]):
+        x, vjp = jax.vjp(fn, p, x)
+        acts.append(x)
+        mid_vjps.append(vjp)
+
+    # Phase 2 — final-stage forward + backward (step 3)
+    loss, last_vjp = jax.vjp(stage_fns[-1], stage_params[-1], x)
+    g_last, g_x = last_vjp(jnp.ones_like(loss))
+
+    # Phase 3 — backward relay with the injected cotangents (step 4)
+    grads, grad_acts = [g_last], [g_x]
+    for vjp in reversed(mid_vjps):
+        g_p, g_x = vjp(g_x)
+        grads.append(g_p)
+        grad_acts.append(g_x)
+    (g0,) = vjp0(g_x)
+    grads.append(g0)
+
+    grads.reverse()
+    grad_acts.reverse()
+    return PipelineStepResult(
+        loss=loss,
+        grads=tuple(grads),
+        activations=tuple(acts),
+        bytes_up=tuple(_nbytes(a) for a in acts),
+        bytes_down=tuple(_nbytes(g) for g in grad_acts),
+    )
+
+
 def split_grads(client_fn: Callable[[Params], jax.Array],
                 server_loss_fn: Callable[[Params, jax.Array], jax.Array],
                 client_params: Params,
                 server_params: Params) -> SplitStepResult:
-    """One split-learning fwd/bwd.
+    """One classic two-stage split fwd/bwd (the paper's protocol verbatim,
+    = ``pipeline_grads`` with a single cut).
 
     client_fn(client_params) -> activation  (client data is closed over —
     it never appears in the server phase, which sees only the activation).
     server_loss_fn(server_params, activation) -> scalar loss.
     """
-    # Phase 1 — client-side forward (Algorithm 2, step 2)
-    activation, client_vjp = jax.vjp(client_fn, client_params)
-
-    # Phase 2 — server-side forward + backward (step 3).  The activation is
-    # a *leaf* input here: exactly the paper's "detach from computation
-    # graph and forward to server".
-    loss, server_vjp = jax.vjp(server_loss_fn, server_params, activation)
-    grads_server, grad_activation = server_vjp(jnp.ones_like(loss))
-
-    # Phase 3 — client-side update from the returned gradient (step 4)
-    (grads_client,) = client_vjp(grad_activation)
-
-    nbytes = lambda x: sum(l.size * l.dtype.itemsize
-                           for l in jax.tree.leaves(x))
+    res = pipeline_grads([client_fn, server_loss_fn],
+                         [client_params, server_params])
     return SplitStepResult(
-        loss=loss,
-        grads_client=grads_client,
-        grads_server=grads_server,
-        activation=activation,
-        bytes_up=nbytes(activation),
-        bytes_down=nbytes(grad_activation),
+        loss=res.loss,
+        grads_client=res.grads[0],
+        grads_server=res.grads[1],
+        activation=res.activations[0],
+        bytes_up=res.bytes_up[0],
+        bytes_down=res.bytes_down[0],
     )
 
 
 def end_to_end_grads(client_fn, server_loss_fn, client_params, server_params):
-    """Reference: the same objective differentiated end-to-end."""
-    def full(cp, sp):
-        return server_loss_fn(sp, client_fn(cp))
-    loss, grads = jax.value_and_grad(full, argnums=(0, 1))(client_params,
-                                                           server_params)
+    """Reference: the same two-stage objective differentiated end-to-end."""
+    loss, grads = end_to_end_grads_n([client_fn, server_loss_fn],
+                                     [client_params, server_params])
     return loss, grads[0], grads[1]
+
+
+def end_to_end_grads_n(stage_fns: Sequence[Callable],
+                       stage_params: Sequence[Params]):
+    """Reference: the composed N-stage objective differentiated end-to-end.
+    Returns (loss, per-stage grads tuple)."""
+
+    def full(*ps):
+        x = stage_fns[0](ps[0])
+        for fn, p in zip(stage_fns[1:-1], ps[1:-1]):
+            x = fn(p, x)
+        return stage_fns[-1](ps[-1], x)
+
+    argnums = tuple(range(len(stage_params)))
+    loss, grads = jax.value_and_grad(full, argnums=argnums)(*stage_params)
+    return loss, grads

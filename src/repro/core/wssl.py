@@ -65,16 +65,32 @@ def selection_mask(idx: jax.Array, num_clients: int) -> jax.Array:
     return jnp.zeros((num_clients,), jnp.float32).at[idx].set(1.0)
 
 
+def participation_mask(rng: jax.Array, weights: jax.Array, cfg: WSSLConfig,
+                       round_index, idx: Optional[jax.Array] = None
+                       ) -> jax.Array:
+    """Algorithm 1's per-round participation as a (N,) mask.
+
+    The single home of the "round 0 selects everyone" rule (line 4), jit-safe:
+    ``round_index`` may be a traced scalar — the rule is applied under
+    ``jnp.where``, so the fused round and the host-side loop share it.
+    ``idx`` lets a caller that already drew the Gumbel-top-k sample reuse
+    it instead of re-sampling."""
+    if idx is None:
+        idx = weighted_sample(rng, weights, cfg.num_selected())
+    mask = selection_mask(idx, cfg.num_clients)
+    return jnp.where(round_index == 0, jnp.ones_like(mask), mask)
+
+
 def select_clients(rng: jax.Array, weights: jax.Array, cfg: WSSLConfig,
                    round_index: int = 1) -> Tuple[jax.Array, jax.Array]:
-    """Full Algorithm 1 for one epoch.  Round 0 selects everyone (line 4)."""
+    """Full Algorithm 1 for one epoch (host-side view with concrete
+    indices); the round-0 rule lives in :func:`participation_mask`."""
     n = cfg.num_clients
+    sampled = weighted_sample(rng, weights, cfg.num_selected())
+    mask = participation_mask(rng, weights, cfg, round_index, idx=sampled)
     if round_index == 0:
-        idx = jnp.arange(n, dtype=jnp.int32)
-        return idx, jnp.ones((n,), jnp.float32)
-    k = cfg.num_selected()
-    idx = weighted_sample(rng, weights, k)
-    return idx, selection_mask(idx, n)
+        return jnp.arange(n, dtype=jnp.int32), mask
+    return sampled, mask
 
 
 # ---------------------------------------------------------------------------
@@ -84,8 +100,12 @@ def select_clients(rng: jax.Array, weights: jax.Array, cfg: WSSLConfig,
 
 def aggregation_weights(weights: jax.Array, mask: jax.Array,
                         cfg: WSSLConfig) -> jax.Array:
-    """Per-client aggregation coefficients, restricted to selected clients."""
-    if cfg.aggregation == "uniform":
+    """Per-client aggregation coefficients, restricted to selected clients.
+
+    ``aggregation="trimmed_mean"`` weighs like "uniform" here (these scalar
+    coefficients also weight the per-client losses); the robust parameter
+    aggregation itself is :func:`trimmed_mean_average`."""
+    if cfg.aggregation in ("uniform", "trimmed_mean"):
         w = mask
     else:
         w = weights * mask
@@ -120,6 +140,49 @@ def weighted_average(stacked: Params, coefs: jax.Array, *,
         return out.reshape(a.shape[1:]).astype(a.dtype)
 
     return jax.tree.map(one, stacked)
+
+
+def trimmed_mean_average(stacked: Params, mask: jax.Array,
+                         trim_fraction: float = 0.1) -> Params:
+    """Coordinate-wise trimmed mean over the *masked* client axis.
+
+    The classic Byzantine-robust aggregation rule: per parameter coordinate,
+    drop the k lowest and k highest surviving values (k = ⌊trim·s⌋ for s
+    participants, capped so at least one survives) and average the rest.
+    jit-safe with a dynamic mask: dead clients sort to +inf and a rank
+    window [k, s-k) selects the kept values — shapes never change.  With an
+    empty mask it falls back to the trimmed mean over *all* clients (clients
+    start each round synchronized, so that is a no-op sync)."""
+    m = jnp.where(mask.sum() > 0, mask, jnp.ones_like(mask))
+    s = m.sum()
+    k = jnp.clip(jnp.floor(trim_fraction * s), 0.0, jnp.floor((s - 1) / 2))
+
+    def one(a):
+        n = a.shape[0]
+        tail = (1,) * (a.ndim - 1)
+        alive = m.reshape((n,) + tail) > 0
+        vals = jnp.where(alive, a.astype(jnp.float32), jnp.inf)
+        srt = jnp.sort(vals, axis=0)
+        rank = jnp.arange(n, dtype=jnp.float32).reshape((n,) + tail)
+        inc = (rank >= k) & (rank < s - k)
+        kept = jnp.where(inc, srt, 0.0)
+        return (kept.sum(axis=0) / jnp.maximum(s - 2.0 * k, 1.0)
+                ).astype(a.dtype)
+
+    return jax.tree.map(one, stacked)
+
+
+def aggregate_clients(stacked: Params, importance: jax.Array,
+                      mask: jax.Array, cfg: WSSLConfig, *,
+                      safe: bool = False) -> Params:
+    """Dispatch Algorithm 2 step 5 on ``cfg.aggregation``: importance/uniform
+    weighted average, or the robust coordinate-wise trimmed mean.  ``safe``
+    selects the empty-mask fallback (fault-injected rounds can drop every
+    selected client)."""
+    if cfg.aggregation == "trimmed_mean":
+        return trimmed_mean_average(stacked, mask, cfg.trim_fraction)
+    fn = safe_aggregation_weights if safe else aggregation_weights
+    return weighted_average(stacked, fn(importance, mask, cfg))
 
 
 def broadcast_global(stacked: Params, global_params: Params) -> Params:

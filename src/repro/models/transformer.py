@@ -14,7 +14,7 @@ Param trees carry a parallel *logical axes* tree (see repro.sharding).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -288,63 +288,185 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
-# WSSL stage split (client = embed + first cut//period super-blocks)
+# WSSL stage partition (N-stage pipeline; the classic client/server split is
+# the length-1 cuts case)
 # ---------------------------------------------------------------------------
 
 
-def split_params(params: Params, cfg: ModelConfig, cut: int
-                 ) -> Tuple[Params, Params]:
-    """Split a param tree at layer ``cut`` (must be a super-block boundary)."""
+def _check_cuts(cfg: ModelConfig, cuts: Sequence[int]) -> Tuple[int, ...]:
     period = cfg.period
-    assert cut % period == 0, f"cut {cut} must align to super-block ({period})"
-    cb = cut // period
-    client = {
+    cuts = tuple(int(c) for c in cuts)
+    assert cuts, "need at least one cut"
+    prev = -1  # cut 0 is legal: a thin client holding only the embedding
+    for c in cuts:
+        assert c % period == 0, \
+            f"cut {c} must align to super-block ({period})"
+        assert prev < c, f"cuts must be strictly increasing: {cuts}"
+        prev = c
+    assert cuts[-1] <= cfg.num_layers, \
+        f"last cut {cuts[-1]} exceeds num_layers ({cfg.num_layers})"
+    return cuts
+
+
+def partition_params(params: Params, cfg: ModelConfig, cuts: Sequence[int]
+                     ) -> List[Params]:
+    """Partition a param tree at layers ``cuts`` into ``len(cuts)+1`` stages.
+
+    Stage 0 (the client) owns the embedding (+ frontend) and the first
+    ``cuts[0]//period`` super-blocks; intermediate (edge) stages own the
+    super-blocks between consecutive cuts; the final (server) stage owns the
+    rest plus the remainder layers, final norm, and output head."""
+    cuts = _check_cuts(cfg, cuts)
+    bounds = [c // cfg.period for c in cuts]
+    first: Params = {
         "embed": params["embed"],
-        "stack": jax.tree.map(lambda a: a[:cb], params["stack"]),
+        "stack": jax.tree.map(lambda a: a[:bounds[0]], params["stack"]),
     }
     if "frontend" in params:
-        client["frontend"] = params["frontend"]
-    server = {
-        "stack": jax.tree.map(lambda a: a[cb:], params["stack"]),
+        first["frontend"] = params["frontend"]
+    stages = [first]
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        stages.append({"stack": jax.tree.map(
+            lambda a, lo=lo, hi=hi: a[lo:hi], params["stack"])})
+    last: Params = {
+        "stack": jax.tree.map(lambda a, lo=bounds[-1]: a[lo:],
+                              params["stack"]),
         "rem": params["rem"],
         "final_norm": params["final_norm"],
     }
     if cfg.tie_embeddings:
         # tied unembedding lives on the server: keep a server-side copy of
         # the embedding matrix (the paper's server owns the output head).
-        server["embed"] = params["embed"]
+        last["embed"] = params["embed"]
     elif "head" in params:
-        server["head"] = params["head"]
+        last["head"] = params["head"]
+    stages.append(last)
+    return stages
+
+
+def partition_axes(axes: Dict[str, Any], cfg: ModelConfig,
+                   cuts: Sequence[int]) -> List[Dict[str, Any]]:
+    """The logical-axes trees matching :func:`partition_params`.  (Stack
+    axes are per-leaf annotations — slicing the leading scan axis does not
+    change them, so every stage shares ``axes["stack"]``.)"""
+    cuts = _check_cuts(cfg, cuts)
+    first = {"embed": axes["embed"], "stack": axes["stack"]}
+    if "frontend" in axes:
+        first["frontend"] = axes["frontend"]
+    stages: List[Dict[str, Any]] = [first]
+    for _ in cuts[1:]:
+        stages.append({"stack": axes["stack"]})
+    last = {"stack": axes["stack"], "rem": axes["rem"],
+            "final_norm": axes["final_norm"]}
+    if cfg.tie_embeddings:
+        last["embed"] = axes["embed"]
+    elif "head" in axes:
+        last["head"] = axes["head"]
+    stages.append(last)
+    return stages
+
+
+def split_params(params: Params, cfg: ModelConfig, cut: int
+                 ) -> Tuple[Params, Params]:
+    """Split a param tree at layer ``cut`` (the two-stage special case)."""
+    client, server = partition_params(params, cfg, (cut,))
     return client, server
 
 
 def split_axes(axes: Dict[str, Any], cfg: ModelConfig, cut: int):
     """The logical-axes trees matching :func:`split_params`."""
-    client = {"embed": axes["embed"], "stack": axes["stack"]}
-    if "frontend" in axes:
-        client["frontend"] = axes["frontend"]
-    server = {"stack": axes["stack"], "rem": axes["rem"],
-              "final_norm": axes["final_norm"]}
-    if cfg.tie_embeddings:
-        server["embed"] = axes["embed"]
-    elif "head" in axes:
-        server["head"] = axes["head"]
+    client, server = partition_axes(axes, cfg, (cut,))
     return client, server
 
 
-def join_params(client: Params, server: Params, cfg: ModelConfig) -> Params:
+def join_stages(stages: Sequence[Params], cfg: ModelConfig) -> Params:
+    """Invert :func:`partition_params`: reassemble the full param tree."""
+    first, last = stages[0], stages[-1]
+    stack = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                         *[s["stack"] for s in stages])
     joined = {
-        "embed": client["embed"],
-        "stack": jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
-                              client["stack"], server["stack"]),
-        "rem": server["rem"],
-        "final_norm": server["final_norm"],
+        "embed": first["embed"],
+        "stack": stack,
+        "rem": last["rem"],
+        "final_norm": last["final_norm"],
     }
-    if "frontend" in client:
-        joined["frontend"] = client["frontend"]
-    if "head" in server:
-        joined["head"] = server["head"]
+    if "frontend" in first:
+        joined["frontend"] = first["frontend"]
+    if "head" in last:
+        joined["head"] = last["head"]
     return joined
+
+
+def join_params(client: Params, server: Params, cfg: ModelConfig) -> Params:
+    return join_stages([client, server], cfg)
+
+
+def _stack_forward(stack: Params, cfg: ModelConfig, x: jax.Array,
+                   positions: jax.Array, impl: str, remat: bool,
+                   remat_span: int) -> jax.Array:
+    """Scan a stacked run of super-blocks over ``x``, dropping MoE aux (the
+    classic client stage's semantics — callers that must keep the objective
+    cut-invariant for MoE use :func:`_stack_forward_aux`)."""
+    period_specs, _, _ = _superblock_layout(cfg)
+
+    nested = remat and len(period_specs) > 1
+
+    def block(x, bp):
+        for j, spec in enumerate(period_specs):
+            layer = functools.partial(_apply_layer, cfg, spec)
+            if nested:
+                layer = jax.checkpoint(layer, static_argnums=(3,))
+            x, _ = layer(bp[j], x, positions, impl)
+        return x
+
+    n_full = jax.tree.leaves(stack)[0].shape[0]
+    span = _resolve_span(n_full, remat_span if remat else 1)
+
+    def span_block(x, sp_):
+        for t in range(span):
+            x = block(x, jax.tree.map(lambda a: a[t], sp_))
+        return x, None
+
+    body = jax.checkpoint(span_block) if remat else span_block
+    st = jax.tree.map(
+        lambda a: a.reshape((max(n_full // span, 0), span) + a.shape[1:]),
+        stack)
+    x, _ = jax.lax.scan(body, x, st)
+    return x
+
+
+def _stack_forward_aux(stack: Params, cfg: ModelConfig, x: jax.Array,
+                       positions: jax.Array, impl: str, remat: bool,
+                       remat_span: int) -> Tuple[jax.Array, jax.Array]:
+    """:func:`_stack_forward` carrying the MoE aux loss → (x, aux)."""
+    period_specs, _, _ = _superblock_layout(cfg)
+
+    nested = remat and len(period_specs) > 1
+
+    def block(carry, bp):
+        x, aux = carry
+        for j, spec in enumerate(period_specs):
+            layer = functools.partial(_apply_layer, cfg, spec)
+            if nested:
+                layer = jax.checkpoint(layer, static_argnums=(3,))
+            x, a = layer(bp[j], x, positions, impl)
+            aux = aux + a
+        return (x, aux)
+
+    n_full = jax.tree.leaves(stack)[0].shape[0]
+    span = _resolve_span(n_full, remat_span if remat else 1)
+
+    def span_block(carry, sp_):
+        for t in range(span):
+            carry = block(carry, jax.tree.map(lambda a: a[t], sp_))
+        return carry, None
+
+    body = jax.checkpoint(span_block) if remat else span_block
+    st = jax.tree.map(
+        lambda a: a.reshape((max(n_full // span, 0), span) + a.shape[1:]),
+        stack)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), st)
+    return x, aux
 
 
 def client_forward(client_params: Params, cfg: ModelConfig,
@@ -362,32 +484,38 @@ def client_forward(client_params: Params, cfg: ModelConfig,
                                            embeds.shape[1])
         else:
             positions = text_positions(b, s, cfg)
-    period_specs, _, _ = _superblock_layout(cfg)
+    return _stack_forward(client_params["stack"], cfg, x, positions, impl,
+                          remat, remat_span)
 
-    nested = remat and len(period_specs) > 1
 
-    def block(x, bp):
-        for j, spec in enumerate(period_specs):
-            layer = functools.partial(_apply_layer, cfg, spec)
-            if nested:
-                layer = jax.checkpoint(layer, static_argnums=(3,))
-            x, _ = layer(bp[j], x, positions, impl)
-        return x
+def stage_forward(stage_params: Params, cfg: ModelConfig, x: jax.Array,
+                  stage_index: int, *,
+                  embeds: Optional[jax.Array] = None,
+                  positions: Optional[jax.Array] = None,
+                  impl: str = "chunked", remat: bool = True,
+                  remat_span: int = 1, with_aux: bool = False):
+    """Forward one non-final pipeline stage → the hop activation.
 
-    n_full = jax.tree.leaves(client_params["stack"])[0].shape[0]
-    span = _resolve_span(n_full, remat_span if remat else 1)
+    Stage 0 interprets ``x`` as tokens (embedding + client super-blocks);
+    intermediate stages take the upstream hop activation.  The final stage
+    ends in the objective — use :func:`server_loss` (training) or
+    :func:`server_forward` (logits) for it.
 
-    def span_block(x, sp_):
-        for t in range(span):
-            x = block(x, jax.tree.map(lambda a: a[t], sp_))
-        return x, None
-
-    body = jax.checkpoint(span_block) if remat else span_block
-    stack = jax.tree.map(
-        lambda a: a.reshape((max(n_full // span, 0), span) + a.shape[1:]),
-        client_params["stack"])
-    x, _ = jax.lax.scan(body, x, stack)
-    return x
+    ``with_aux=True`` returns (x, aux) with the stage's MoE load-balance
+    loss, which the fused round adds to the objective so MoE training is
+    invariant to where the cuts sit.  The default drops aux (the classic
+    client stage's semantics — stage 0's aux is always dropped)."""
+    if stage_index == 0:
+        out = client_forward(stage_params, cfg, x, embeds=embeds,
+                             positions=positions, impl=impl, remat=remat,
+                             remat_span=remat_span)
+        return (out, jnp.zeros((), jnp.float32)) if with_aux else out
+    b, s, _ = x.shape
+    if positions is None:
+        positions = text_positions(b, s, cfg)
+    fwd = _stack_forward_aux if with_aux else _stack_forward
+    return fwd(stage_params["stack"], cfg, x, positions, impl, remat,
+               remat_span)
 
 
 def server_hidden(server_params: Params, cfg: ModelConfig,

@@ -1,19 +1,22 @@
 """repro.sim — fault-injection / client-heterogeneity scenarios for WSSL.
 
 * faults.py   — jit-safe ScenarioParams / FaultPlan + mask/transform ops
-                that compose with the Gumbel-top-k selection mask.
+                that compose with the Gumbel-top-k selection mask,
+                including Byzantine (sign-flip / scaled-update) attacks and
+                per-hop faults for multi-hop pipelines.
 * registry.py — named presets (clean, dropout-30, stragglers,
                 label-flip-adversary, grad-noise-adversary,
-                noniid-dirichlet).
+                sign-flip-adversary, scaled-grad-adversary,
+                noniid-dirichlet, edge-dropout, edge-latency).
 
 The Scenario config dataclass itself lives in ``repro.config``; the data
 partition hook in ``repro.data.partition.partition_for_scenario``.
 """
 
 from repro.sim.faults import (FaultPlan, ScenarioParams,  # noqa: F401
-                              add_gradient_noise, corrupt_client_grads,
-                              corrupt_labels, label_shift,
-                              sample_fault_plan, scale_client_updates,
-                              scenario_params)
+                              add_gradient_noise, apply_sign_flip,
+                              corrupt_client_grads, corrupt_labels,
+                              label_shift, sample_fault_plan,
+                              scale_client_updates, scenario_params)
 from repro.sim.registry import (SCENARIOS, get_scenario,  # noqa: F401
                                 list_scenarios, register_scenario)

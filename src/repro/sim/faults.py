@@ -11,11 +11,19 @@ compose with the Gumbel-top-k selection mask:
                     exactly like an unselected client).
 * ``flip``        — 1 for adversarial clients whose *training* labels are
                     shifted under ``jnp.where`` (shapes never change).
-* ``grad_scale``  — stragglers complete 1/slowdown of a full local step;
-                    applied to the parameter *update* (post-optimizer),
-                    because Adam's normalized step is invariant to constant
-                    gradient scaling.
+* ``grad_scale``  — stragglers (and clients behind slow edge hops) complete
+                    1/slowdown of a full local step; applied to the
+                    parameter *update* (post-optimizer), because Adam's
+                    normalized step is invariant to constant gradient
+                    scaling.
 * ``noise_scale`` — σ of Gaussian noise added to the client-stage gradient.
+* ``sign_flip``   — Byzantine clients send the negated gradient.
+* ``byz_scale``   — Byzantine amplification of the sent update (model
+                    poisoning; composed into ``scale_client_updates``).
+
+Multi-hop pipelines add per-hop faults: each edge-hop replica can die for a
+round (masking exactly the clients routed through it — composed into
+``keep``) or straggle (composed into ``grad_scale``).
 
 Every transform is an exact no-op at the clean parameter point (multiply by
 1.0, add 0·ε, ``where`` on an all-false mask), which is what makes the
@@ -44,6 +52,12 @@ class ScenarioParams(NamedTuple):
     label_flip_fraction: jax.Array
     gradient_noise_fraction: jax.Array
     gradient_noise_scale: jax.Array
+    sign_flip_fraction: jax.Array
+    grad_scale_fraction: jax.Array
+    grad_scale_factor: jax.Array
+    hop_dropout_prob: jax.Array
+    hop_latency_prob: jax.Array
+    hop_latency_slowdown: jax.Array
 
 
 class FaultPlan(NamedTuple):
@@ -53,6 +67,8 @@ class FaultPlan(NamedTuple):
     flip: jax.Array          # (N,) 1.0 = training labels corrupted
     grad_scale: jax.Array    # (N,) straggler update fraction (1.0 = full)
     noise_scale: jax.Array   # (N,) gradient-noise sigma (0.0 = none)
+    sign_flip: jax.Array     # (N,) 1.0 = client-stage gradient sign-flipped
+    byz_scale: jax.Array     # (N,) Byzantine gradient scale (1.0 = none)
 
 
 def scenario_params(sc: Scenario) -> ScenarioParams:
@@ -65,28 +81,61 @@ def scenario_params(sc: Scenario) -> ScenarioParams:
         label_flip_fraction=f(sc.label_flip_fraction),
         gradient_noise_fraction=f(sc.gradient_noise_fraction),
         gradient_noise_scale=f(sc.gradient_noise_scale),
+        sign_flip_fraction=f(sc.sign_flip_fraction),
+        grad_scale_fraction=f(sc.grad_scale_fraction),
+        grad_scale_factor=f(sc.grad_scale_factor),
+        hop_dropout_prob=f(sc.hop_dropout_prob),
+        hop_latency_prob=f(sc.hop_latency_prob),
+        hop_latency_slowdown=f(sc.hop_latency_slowdown),
     )
 
 
-def sample_fault_plan(rng: jax.Array, sp: ScenarioParams,
-                      num_clients: int) -> FaultPlan:
+def sample_fault_plan(rng: jax.Array, sp: ScenarioParams, num_clients: int,
+                      num_hops: int = 0, hop_replicas: int = 1) -> FaultPlan:
     """One round's FaultPlan.  Cohorts are deterministic index ranges
     (``floor(fraction·N)`` adversaries from the bottom, stragglers from the
     top — matching ``Scenario.adversary_ids``/``straggler_ids``); only
-    dropout consumes randomness."""
+    dropout and the per-hop faults consume randomness (on fold_in-derived
+    streams, so adding hops never perturbs the client-dropout draw).
+
+    ``num_hops`` is the number of intermediate (edge) stages of the
+    pipeline; each hop level has ``hop_replicas`` fault domains and client i
+    routes through replica ``i % hop_replicas`` at every level.  A dead
+    replica masks exactly its routed clients (composed into ``keep``); a
+    slow replica scales their round progress (composed into ``grad_scale``,
+    min with the client's own straggler scale)."""
     n = num_clients
     ids = jnp.arange(n, dtype=jnp.float32)
     flip = (ids + 1.0 <= sp.label_flip_fraction * n + 1e-6)
     noisy = (ids + 1.0 <= sp.gradient_noise_fraction * n + 1e-6)
+    sflip = (ids + 1.0 <= sp.sign_flip_fraction * n + 1e-6)
+    scaled = (ids + 1.0 <= sp.grad_scale_fraction * n + 1e-6)
     n_strag = jnp.floor(sp.straggler_fraction * n + 1e-6)
     strag = ids >= n - n_strag
     dropped = jax.random.bernoulli(rng, sp.dropout_prob, (n,))
     slow = 1.0 / jnp.maximum(sp.straggler_slowdown, 1.0)
+    keep = 1.0 - dropped.astype(jnp.float32)
+    grad_scale = jnp.where(strag, slow, 1.0)
+
+    if num_hops > 0:
+        r = max(int(hop_replicas), 1)
+        route = jnp.arange(n) % r                       # client -> replica
+        dead = jax.random.bernoulli(jax.random.fold_in(rng, 0xE06E),
+                                    sp.hop_dropout_prob, (num_hops, r))
+        slow_hop = jax.random.bernoulli(jax.random.fold_in(rng, 0x57A1),
+                                        sp.hop_latency_prob, (num_hops, r))
+        keep = keep * (1.0 - dead[:, route].any(axis=0).astype(jnp.float32))
+        hop_slow = 1.0 / jnp.maximum(sp.hop_latency_slowdown, 1.0)
+        hop_scale = jnp.where(slow_hop[:, route].any(axis=0), hop_slow, 1.0)
+        grad_scale = jnp.minimum(grad_scale, hop_scale)
+
     return FaultPlan(
-        keep=1.0 - dropped.astype(jnp.float32),
+        keep=keep,
         flip=flip.astype(jnp.float32),
-        grad_scale=jnp.where(strag, slow, 1.0),
+        grad_scale=grad_scale,
         noise_scale=noisy.astype(jnp.float32) * sp.gradient_noise_scale,
+        sign_flip=sflip.astype(jnp.float32),
+        byz_scale=jnp.where(scaled, sp.grad_scale_factor, 1.0),
     )
 
 
@@ -125,27 +174,43 @@ def add_gradient_noise(grads: Params, rng: jax.Array, sigma,
     return jax.tree.unflatten(treedef, out)
 
 
+def apply_sign_flip(plan: FaultPlan, grads: Params) -> Params:
+    """Sign-flip Byzantine attack on stacked (N, ...) client-stage
+    gradients (ascends instead of descends; survives Adam because the
+    *direction* flips).  ``jnp.where`` on the flip mask keeps the clean
+    plan an exact bit-for-bit identity."""
+    def one(g):
+        return jnp.where(_per_client(plan.sign_flip, g) > 0, -g, g)
+
+    return jax.tree.map(one, grads)
+
+
 def corrupt_client_grads(plan: FaultPlan, grads: Params,
                          rng: jax.Array) -> Params:
-    """Adversarial Gaussian noise on stacked (N, ...) client-stage
-    gradients.  Exact identity when noise≡0.  (Straggler slowdown is NOT
-    applied here: a constant gradient scale is inert under Adam's
-    normalized step — use ``scale_client_updates`` on the optimizer's
-    output instead.)"""
+    """Byzantine sign flip + adversarial Gaussian noise on stacked (N, ...)
+    client-stage gradients.  Exact identity at the clean plan.
+    (Constant *magnitude* attacks are not applied here: a constant gradient
+    scale is inert under Adam's normalized step — straggler slowdown and the
+    ``scaled_gradient`` amplification both go through
+    ``scale_client_updates`` on the optimizer's output instead.)"""
+    grads = apply_sign_flip(plan, grads)
     return add_gradient_noise(grads, rng, plan.noise_scale, per_client=True)
 
 
 def scale_client_updates(plan: FaultPlan, new_params: Params,
                          old_params: Params) -> Params:
-    """Straggler partial progress: θ ← θ_old + grad_scale·(θ_new − θ_old)
-    per client, applied to the post-optimizer update so it bites under
-    scale-invariant optimizers (Adam).  Non-stragglers keep θ_new
-    bit-for-bit via jnp.where."""
-    strag = plan.grad_scale < 1.0
+    """Per-client update scaling: θ ← θ_old + s·(θ_new − θ_old), applied to
+    the post-optimizer update so it bites under scale-invariant optimizers
+    (Adam).  s = grad_scale·byz_scale composes straggler partial progress
+    (s < 1, incl. slow edge hops) with the ``scaled_gradient`` Byzantine
+    amplification (s > 1).  Unaffected clients keep θ_new bit-for-bit via
+    jnp.where."""
+    scale = plan.grad_scale * plan.byz_scale
+    affected = scale != 1.0
 
     def one(new, old):
-        sc = _per_client(plan.grad_scale, new).astype(jnp.float32)
-        m = _per_client(strag, new)
+        sc = _per_client(scale, new).astype(jnp.float32)
+        m = _per_client(affected, new)
         scaled = (old.astype(jnp.float32)
                   + sc * (new.astype(jnp.float32) - old.astype(jnp.float32))
                   ).astype(new.dtype)

@@ -31,7 +31,18 @@ register_scenario(Scenario(name="label-flip-adversary",
 register_scenario(Scenario(name="grad-noise-adversary",
                            gradient_noise_fraction=0.25,
                            gradient_noise_scale=0.5))
+register_scenario(Scenario(name="sign-flip-adversary",
+                           sign_flip_fraction=0.25))
+# amplification must be large enough to overshoot: a mildly scaled honest
+# update is just a bigger step and *helps* early training
+register_scenario(Scenario(name="scaled-grad-adversary",
+                           grad_scale_fraction=0.25,
+                           grad_scale_factor=32.0))
 register_scenario(Scenario(name="noniid-dirichlet", skew_alpha=0.1))
+# multi-hop faults: no-ops on single-cut pipelines (num_hops == 0)
+register_scenario(Scenario(name="edge-dropout", hop_dropout_prob=0.3))
+register_scenario(Scenario(name="edge-latency", hop_latency_prob=0.5,
+                           hop_latency_slowdown=4.0))
 
 
 def get_scenario(name: str) -> Scenario:

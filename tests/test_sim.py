@@ -18,15 +18,26 @@ from repro.sim import (SCENARIOS, FaultPlan, corrupt_client_grads,
 TINY = ModelConfig(name="tiny-sim", num_layers=2, d_model=32, num_heads=2,
                    num_kv_heads=2, d_ff=64, vocab_size=64,
                    dtype="float32", param_dtype="float32")
+TINY3 = TINY.replace(name="tiny-sim-3stage", num_layers=3)
 
 
-def _round_setup(frac=0.5, temp=1.0, ema=0.5, lr=1e-3):
+def _round_setup(frac=0.5, temp=1.0, ema=0.5, lr=1e-3, **wkw):
     w = WSSLConfig(num_clients=4, participation_fraction=frac,
-                   importance_temp=temp, importance_ema=ema)
+                   importance_temp=temp, importance_ema=ema, **wkw)
     t = TrainConfig(remat=False, learning_rate=lr, warmup_steps=0,
                     schedule="constant")
     state, _ = init_state(jax.random.PRNGKey(0), TINY, w, t)
     return w, t, state, make_round_fn(TINY, w, t, impl="dense")
+
+
+def _multihop_setup(frac=1.0, hop_replicas=2, lr=1e-3):
+    """3-stage client→edge→server round over the fixed client axis."""
+    w = WSSLConfig(num_clients=4, participation_fraction=frac,
+                   split_layers=(1, 2), hop_replicas=hop_replicas)
+    t = TrainConfig(remat=False, learning_rate=lr, warmup_steps=0,
+                    schedule="constant")
+    state, _ = init_state(jax.random.PRNGKey(0), TINY3, w, t)
+    return w, t, state, make_round_fn(TINY3, w, t, impl="dense")
 
 
 def _mk_batch(n, b, s, seed, shared=False):
@@ -135,7 +146,9 @@ def test_corrupt_labels_only_flips_adversaries():
     plan = FaultPlan(keep=jnp.ones((4,)),
                      flip=jnp.asarray([1.0, 0.0, 0.0, 0.0]),
                      grad_scale=jnp.ones((4,)),
-                     noise_scale=jnp.zeros((4,)))
+                     noise_scale=jnp.zeros((4,)),
+                     sign_flip=jnp.zeros((4,)),
+                     byz_scale=jnp.ones((4,)))
     labels = jax.random.randint(jax.random.PRNGKey(0), (4, 2, 8), 0, 64)
     out = corrupt_labels(plan, labels, 64)
     np.testing.assert_array_equal(np.asarray(out[1:]),
@@ -230,6 +243,137 @@ def test_one_executable_serves_all_scenarios():
     batch, val = _mk_batch(4, 2, 16, seed=0), _val_batch()
     for name in list_scenarios():
         rf(state, batch, val, scenario_params(get_scenario(name)))
+    assert rf._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# Byzantine adversaries (sign_flip / scaled_gradient)
+# ---------------------------------------------------------------------------
+
+def test_byzantine_presets_registered():
+    sf = get_scenario("sign-flip-adversary")
+    assert sf.sign_flip_ids(4) == [0] and sf.adversary_ids(4) == [0]
+    sg = get_scenario("scaled-grad-adversary")
+    assert sg.grad_scale_ids(8) == [0, 1] and sg.grad_scale_factor > 1.0
+    assert not sf.is_clean() and not sg.is_clean()
+
+
+def test_sign_flip_plan_flips_only_adversaries():
+    plan = sample_fault_plan(
+        jax.random.PRNGKey(0),
+        scenario_params(get_scenario("sign-flip-adversary")), 4)
+    np.testing.assert_array_equal(np.asarray(plan.sign_flip), [1, 0, 0, 0])
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (4, 3, 5))}
+    out = corrupt_client_grads(plan, grads, jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(out["w"][0]),
+                                  -np.asarray(grads["w"][0]))
+    np.testing.assert_array_equal(np.asarray(out["w"][1:]),
+                                  np.asarray(grads["w"][1:]))
+
+
+@pytest.mark.parametrize("name", ["sign-flip-adversary",
+                                  "scaled-grad-adversary"])
+def test_byzantine_adversary_downweighted(name):
+    """Importance weighting must push Byzantine clients below the clean
+    mean.  All clients share identical batches so the only per-client
+    difference is the injected attack."""
+    w, t, state, rf = _round_setup(frac=1.0, temp=0.3, ema=0.7, lr=1e-2)
+    rf = jax.jit(rf)
+    val = _val_batch()
+    sp = scenario_params(get_scenario(name))
+    for r in range(8):
+        state, m = rf(state, _mk_batch(4, 2, 16, seed=r, shared=True),
+                      val, sp)
+    imp = np.asarray(m.importance)
+    assert imp[0] < imp[1:].mean(), (name, imp)
+
+
+# ---------------------------------------------------------------------------
+# per-hop faults (multi-hop pipelines)
+# ---------------------------------------------------------------------------
+
+def test_hop_plan_clean_is_identity():
+    sp = scenario_params(get_scenario("clean"))
+    plan = sample_fault_plan(jax.random.PRNGKey(0), sp, 8, num_hops=2,
+                             hop_replicas=2)
+    np.testing.assert_array_equal(np.asarray(plan.keep), 1.0)
+    np.testing.assert_array_equal(np.asarray(plan.grad_scale), 1.0)
+    np.testing.assert_array_equal(np.asarray(plan.byz_scale), 1.0)
+
+
+def test_hop_dropout_masks_exactly_routed_clients():
+    """keep must be a pure function of the client's replica route
+    (i % hop_replicas) when only hop faults are active."""
+    sp = scenario_params(Scenario(hop_dropout_prob=0.5))
+    for seed in range(6):
+        plan = sample_fault_plan(jax.random.PRNGKey(seed), sp, 8,
+                                 num_hops=2, hop_replicas=2)
+        keep = np.asarray(plan.keep)
+        for i in range(8):
+            assert keep[i] == keep[i % 2], keep
+    # certain hop death masks everyone (every client routes through a hop)
+    sp1 = scenario_params(Scenario(hop_dropout_prob=1.0))
+    plan = sample_fault_plan(jax.random.PRNGKey(0), sp1, 8, num_hops=1,
+                             hop_replicas=4)
+    np.testing.assert_array_equal(np.asarray(plan.keep), 0.0)
+    # hop faults are structural no-ops on single-cut pipelines
+    plan0 = sample_fault_plan(jax.random.PRNGKey(0), sp1, 8, num_hops=0)
+    np.testing.assert_array_equal(np.asarray(plan0.keep), 1.0)
+
+
+def test_hop_latency_scales_routed_clients():
+    sp = scenario_params(Scenario(hop_latency_prob=1.0,
+                                  hop_latency_slowdown=4.0))
+    plan = sample_fault_plan(jax.random.PRNGKey(0), sp, 8, num_hops=1,
+                             hop_replicas=2)
+    np.testing.assert_array_equal(np.asarray(plan.grad_scale), 0.25)
+    np.testing.assert_array_equal(np.asarray(plan.keep), 1.0)
+
+
+def test_multihop_clean_scenario_equals_plain_round():
+    """The clean ≡ fault-free bit-for-bit guarantee must survive the
+    N-stage generalization (3-stage pipeline, shared edge stage)."""
+    w, t, state, rf = _multihop_setup()
+    assert len(state.edge_stages) == 1
+    batch = _mk_batch(4, 2, 16, seed=0)
+    val = _val_batch()
+    plain_state, plain_m = rf(state, batch, val)
+    sim_state, sim_m = rf(state, batch, val,
+                          scenario_params(get_scenario("clean")))
+    for a, b in zip(jax.tree.leaves((plain_state, plain_m)),
+                    jax.tree.leaves((sim_state, sim_m))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_multihop_dead_hop_is_noop_sync():
+    """A round in which every edge replica dies must leave every stage —
+    client stacks, the edge stage, and the server — untouched."""
+    w, t, state, rf = _multihop_setup()
+    rf = jax.jit(rf)
+    sp = scenario_params(Scenario(hop_dropout_prob=1.0))
+    state2, m = rf(state, _mk_batch(4, 2, 16, seed=0), None, sp)
+    assert float(m.mask.sum()) == 0.0
+    for a, b in zip(jax.tree.leaves((state.client_stack, state.edge_stages,
+                                     state.server_params)),
+                    jax.tree.leaves((state2.client_stack,
+                                     state2.edge_stages,
+                                     state2.server_params))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_one_executable_serves_all_hop_scenarios():
+    """All same-shape scenarios — including the per-hop fault presets —
+    must share ONE compiled 3-stage round executable."""
+    w, t, state, rf = _multihop_setup()
+    rf = jax.jit(rf)
+    batch, val = _mk_batch(4, 2, 16, seed=0), _val_batch()
+    for name in list_scenarios():
+        rf(state, batch, val, scenario_params(get_scenario(name)))
+    # hop faults bite on a multi-hop pipeline (certain hop death ⇒ all
+    # routed clients masked) without triggering a retrace
+    _, m = rf(state, batch, val,
+              scenario_params(Scenario(hop_dropout_prob=1.0)))
+    assert float(m.mask.sum()) == 0.0
     assert rf._cache_size() == 1
 
 

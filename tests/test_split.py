@@ -1,7 +1,8 @@
 """The paper's dual-backprop protocol (Algorithm 2) must be numerically
 identical to end-to-end autodiff — property-tested with hypothesis over
 random widths/depths/batches, plus on both paper models and the
-transformer stack."""
+transformer stack, and for the N-stage generalization (pipeline_grads)
+with 1, 2, and 3 cuts."""
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +10,8 @@ import numpy as np
 import pytest
 from _hypothesis_fallback import given, settings, st
 
-from repro.core.split import end_to_end_grads, split_grads
+from repro.core.split import (end_to_end_grads, end_to_end_grads_n,
+                              pipeline_grads, split_grads)
 
 
 def _tree_allclose(a, b, atol=1e-5):
@@ -134,3 +136,137 @@ def test_split_join_roundtrip():
     joined = tf.join_params(cp, sp, cfg)
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(joined)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# N-stage pipeline (multi-hop: client → edge… → server)
+# ---------------------------------------------------------------------------
+
+
+def _mk_mlp_pipeline(num_cuts, din=6, hidden=8, batch=4, seed=0):
+    """num_cuts+1 tanh-MLP stages + their stage fns (client data closed
+    over in stage 0, squared-error objective in the last stage)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(batch, din)))
+    y = jnp.asarray(rng.normal(size=(batch,)))
+
+    def mk(d0, depth=2):
+        ws, d = [], d0
+        for _ in range(depth):
+            ws.append(jnp.asarray(rng.normal(size=(d, hidden)) / np.sqrt(d)))
+            d = hidden
+        return ws
+
+    stages = [mk(din)]
+    for _ in range(num_cuts - 1):
+        stages.append(mk(hidden))
+    stages.append(mk(hidden) + [jnp.asarray(rng.normal(size=(hidden, 1)))])
+
+    def apply(ws, h):
+        for w in ws:
+            h = jnp.tanh(h @ w)
+        return h
+
+    fns = [lambda c: apply(c, x)]
+    fns += [lambda p, a: apply(p, a)] * (num_cuts - 1)
+
+    def loss_fn(s, a):
+        h = apply(s[:-1], a)
+        return jnp.mean((h @ s[-1])[:, 0] - y) ** 2
+
+    fns.append(loss_fn)
+    return fns, stages
+
+
+@pytest.mark.parametrize("num_cuts", [1, 2, 3])
+def test_pipeline_equals_e2e_mlp(num_cuts):
+    fns, stages = _mk_mlp_pipeline(num_cuts, seed=41 + num_cuts)
+    res = pipeline_grads(fns, stages)
+    loss2, grads2 = end_to_end_grads_n(fns, stages)
+    np.testing.assert_allclose(float(res.loss), float(loss2), rtol=1e-6)
+    assert len(res.grads) == num_cuts + 1
+    assert len(res.activations) == num_cuts
+    for g1, g2 in zip(res.grads, grads2):
+        _tree_allclose(g1, g2)
+    # each hop moves one (batch, hidden) fp32 activation up + gradient down
+    for bu, bd in zip(res.bytes_up, res.bytes_down):
+        assert bu == 4 * 8 * 4 and bd == 4 * 8 * 4
+
+
+def test_pipeline_single_cut_matches_split_grads():
+    fns, stages = _mk_mlp_pipeline(1, seed=7)
+    res = pipeline_grads(fns, stages)
+    legacy = split_grads(fns[0], fns[1], stages[0], stages[1])
+    np.testing.assert_array_equal(np.asarray(res.loss),
+                                  np.asarray(legacy.loss))
+    for a, b in zip(jax.tree.leaves(res.grads[0]),
+                    jax.tree.leaves(legacy.grads_client)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(res.grads[1]),
+                    jax.tree.leaves(legacy.grads_server)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert res.bytes_up[0] == legacy.bytes_up
+
+
+@pytest.mark.parametrize("cuts", [(1,), (1, 2), (1, 2, 3)])
+def test_pipeline_equals_e2e_transformer_multihop(cuts):
+    """3-stage (and 4-stage) transformer pipelines: chained per-hop VJPs ==
+    end-to-end autodiff through the composed stages."""
+    from repro.config import get_arch, reduced
+    from repro.models import transformer as tf
+    cfg = reduced(get_arch("gemma-2b")).replace(num_layers=len(cuts) + 1)
+    params, _ = tf.init_params(jax.random.PRNGKey(0), cfg)
+    stages = tf.partition_params(params, cfg, cuts)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                cfg.vocab_size)
+
+    fns = [lambda c: tf.stage_forward(c, cfg, tokens, 0, impl="dense",
+                                      remat=False)]
+    for j in range(1, len(cuts)):
+        fns.append(lambda p, a, j=j: tf.stage_forward(p, cfg, a, j,
+                                                      impl="dense",
+                                                      remat=False))
+    fns.append(lambda s, a: tf.server_loss(s, cfg, a, labels, impl="dense",
+                                           remat=False)[0])
+
+    res = pipeline_grads(fns, stages)
+    loss2, grads2 = end_to_end_grads_n(fns, stages)
+    np.testing.assert_allclose(float(res.loss), float(loss2), rtol=1e-5)
+    for g1, g2 in zip(res.grads, grads2):
+        _tree_allclose(g1, g2, atol=1e-4)
+
+
+def test_partition_join_roundtrip_multihop():
+    from repro.config import get_arch, reduced
+    from repro.models import transformer as tf
+    cfg = reduced(get_arch("gemma3-12b")).replace(num_layers=6)
+    params, _ = tf.init_params(jax.random.PRNGKey(0), cfg)
+    cuts = (cfg.period, 2 * cfg.period)
+    stages = tf.partition_params(params, cfg, cuts)
+    assert len(stages) == 3
+    joined = tf.join_stages(stages, cfg)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(joined)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # misaligned / non-increasing cuts are rejected
+    with pytest.raises(AssertionError):
+        tf.partition_params(params, cfg, (1,))          # off-period
+    with pytest.raises(AssertionError):
+        tf.partition_params(params, cfg, (4, 2))        # not increasing
+
+
+def test_resolve_cuts_contract():
+    from repro.config import ModelConfig, WSSLConfig
+    cfg = ModelConfig(num_layers=8)
+    # default: single cut == resolve_split
+    w = WSSLConfig()
+    assert w.resolve_cuts(cfg) == (w.resolve_split(cfg),)
+    # explicit multi-hop
+    assert WSSLConfig(split_layers=(2, 4)).resolve_cuts(cfg) == (2, 4)
+    with pytest.raises(ValueError):
+        WSSLConfig(split_layers=()).resolve_cuts(cfg)
+    with pytest.raises(ValueError):
+        WSSLConfig(split_layers=(4, 2)).resolve_cuts(cfg)
+    with pytest.raises(ValueError):
+        WSSLConfig(split_layers=(2, 9)).resolve_cuts(cfg)

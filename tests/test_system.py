@@ -128,3 +128,76 @@ def test_paper_wssl_beats_chance():
     assert h["best_acc"] > 0.62          # clearly above chance
     assert len(h["selected"][0]) == 3    # round 0 selects everyone
     assert h["bytes_up_total"] > 0
+
+
+def test_trimmed_mean_aggregation_round():
+    """aggregation="trimmed_mean" drives the fused round end to end: the
+    robust global stage is finite and every client leaves synced to it."""
+    cfg = reduced(get_arch("gemma3-12b"))
+    w = WSSLConfig(num_clients=4, participation_fraction=1.0,
+                   aggregation="trimmed_mean", trim_fraction=0.25)
+    t = TrainConfig(remat=False, learning_rate=1e-3)
+    state, _ = init_state(jax.random.PRNGKey(0), cfg, w, t)
+    rf = jax.jit(make_round_fn(cfg, w, t, impl="dense"))
+    for r in range(2):
+        state, m = rf(state, _mk_batch(cfg, 4, 2, 64, r), None)
+    leaf = jax.tree.leaves(state.client_stack)[0]
+    assert np.isfinite(np.asarray(leaf)).all()
+    for i in range(1, 4):
+        np.testing.assert_allclose(np.asarray(leaf[0]), np.asarray(leaf[i]),
+                                   atol=1e-6)
+
+
+def test_multihop_round_trains_and_accounts():
+    """A 3-stage client→edge→server round reduces validation loss and
+    reports one byte column per hop crossing."""
+    cfg = reduced(get_arch("gemma-2b")).replace(num_layers=3)
+    w = WSSLConfig(num_clients=4, participation_fraction=1.0,
+                   split_layers=(1, 2))
+    t = TrainConfig(remat=False, learning_rate=3e-3)
+    state, _ = init_state(jax.random.PRNGKey(0), cfg, w, t)
+    assert len(state.edge_stages) == 1 and len(state.opt_edge) == 1
+    rf = jax.jit(make_round_fn(cfg, w, t, impl="dense"))
+    vd = lm_batch(2, 32, cfg.vocab_size, seed=999)
+    val = {"tokens": jnp.asarray(vd["tokens"]),
+           "labels": jnp.asarray(vd["labels"])}
+    first = last = None
+    for r in range(6):
+        state, m = rf(state, _mk_batch(cfg, 4, 2, 32, r), val)
+        if first is None:
+            first = float(m.val_loss.mean())
+        last = float(m.val_loss.mean())
+    assert last < first, (first, last)
+    per_hop = np.asarray(m.bytes_per_hop)
+    assert per_hop.shape == (2,)
+    per_client = 2 * 32 * cfg.d_model * jnp.dtype(cfg.dtype).itemsize
+    np.testing.assert_allclose(per_hop, 4 * per_client)
+    assert float(m.bytes_up) == per_hop.sum()
+    assert float(m.bytes_sync) > 0
+
+
+def test_moe_aux_is_cut_invariant():
+    """Moving MoE layers behind a cut must not change the training
+    objective: edge stages report their router load-balance aux and the
+    round adds it, so a 3-stage pipeline's loss matches the single-cut
+    loss on the same init/batch/selection."""
+    from repro.config import ModelConfig
+
+    cfg = ModelConfig(name="tiny-moe", num_layers=3, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64,
+                      mlp_pattern=("moe",), num_experts=4,
+                      experts_per_token=2, moe_capacity_factor=4.0,
+                      dtype="float32", param_dtype="float32")
+    t = TrainConfig(remat=False, learning_rate=1e-3)
+    d = lm_batch(8, 16, cfg.vocab_size, seed=0)
+    batch = {"tokens": jnp.asarray(d["tokens"]).reshape(4, 2, 16),
+             "labels": jnp.asarray(d["labels"]).reshape(4, 2, 16)}
+    losses = {}
+    for cuts in ((1,), (1, 2)):
+        w = WSSLConfig(num_clients=4, participation_fraction=1.0,
+                       split_layers=cuts)
+        state, _ = init_state(jax.random.PRNGKey(0), cfg, w, t)
+        rf = jax.jit(make_round_fn(cfg, w, t, impl="dense"))
+        _, m = rf(state, batch, None)
+        losses[cuts] = float(m.loss)
+    assert losses[(1,)] == pytest.approx(losses[(1, 2)], rel=1e-5), losses

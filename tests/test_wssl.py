@@ -187,3 +187,90 @@ def test_interpolate_alpha_one_equals_broadcast():
     keep = wssl.interpolate_to_global(stacked, g, alpha=0.0)
     for a, b in zip(jax.tree.leaves(keep), jax.tree.leaves(stacked)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# robust aggregation: coordinate-wise trimmed mean
+# ---------------------------------------------------------------------------
+
+
+def test_trimmed_mean_matches_scipy_style_reference():
+    """Unmasked trimmed mean == the numpy reference (sort, drop k from each
+    tail, average the rest) per coordinate."""
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(8, 5, 3)).astype(np.float32)
+    out = wssl.trimmed_mean_average({"w": jnp.asarray(a)},
+                                    jnp.ones((8,)), trim_fraction=0.25)
+    k = 2  # floor(0.25 * 8)
+    ref = np.sort(a, axis=0)[k:8 - k].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(out["w"]), ref, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_trimmed_mean_ignores_byzantine_outlier():
+    """One client reporting a huge stage must not move the trimmed mean,
+    while the weighted average is dragged arbitrarily far."""
+    base = np.ones((5, 4), np.float32)
+    base[0] = 1e6                       # Byzantine client 0
+    stacked = {"w": jnp.asarray(base)}
+    mask = jnp.ones((5,))
+    tm = wssl.trimmed_mean_average(stacked, mask, trim_fraction=0.2)
+    np.testing.assert_allclose(np.asarray(tm["w"]), 1.0, rtol=1e-6)
+    wa = wssl.weighted_average(stacked, jnp.full((5,), 0.2))
+    assert float(np.asarray(wa["w"]).max()) > 1e4
+
+
+def test_trimmed_mean_respects_mask():
+    """Masked-out clients must not contribute, whatever their values."""
+    vals = np.stack([np.full((3,), v, np.float32)
+                     for v in (1.0, 2.0, 3.0, 1e9)])
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0])     # client 3 unselected
+    out = wssl.trimmed_mean_average({"w": jnp.asarray(vals)}, mask,
+                                    trim_fraction=0.0)
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.0, rtol=1e-6)
+    # trim 1/3 from each tail of the 3 survivors -> the median survivor
+    out = wssl.trimmed_mean_average({"w": jnp.asarray(vals)}, mask,
+                                    trim_fraction=0.34)
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.0, rtol=1e-6)
+
+
+def test_trimmed_mean_empty_mask_and_jit_safety():
+    """Empty mask falls back to all clients (finite, no NaN), and the mask
+    is a dynamic argument — one trace serves every mask."""
+    rng = np.random.default_rng(1)
+    stacked = {"w": jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)}
+    empty = wssl.trimmed_mean_average(stacked, jnp.zeros((4,)), 0.25)
+    assert np.isfinite(np.asarray(empty["w"])).all()
+    # fallback = trimmed mean over ALL clients (k = floor(0.25·4) = 1)
+    ref = np.sort(np.asarray(stacked["w"]), axis=0)[1:3].mean(0)
+    np.testing.assert_allclose(np.asarray(empty["w"]), ref, rtol=1e-5)
+
+    fn = jax.jit(lambda s, m: wssl.trimmed_mean_average(s, m, 0.25))
+    for m in ([1, 1, 1, 1], [1, 0, 1, 0], [0, 0, 0, 0]):
+        fn(stacked, jnp.asarray(m, jnp.float32))
+    assert fn._cache_size() == 1
+
+
+def test_aggregation_weights_trimmed_mean_is_uniform_over_mask():
+    cfg = WSSLConfig(num_clients=4, aggregation="trimmed_mean")
+    w = jnp.asarray([0.7, 0.1, 0.1, 0.1])
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    coefs = np.asarray(wssl.aggregation_weights(w, mask, cfg))
+    np.testing.assert_allclose(coefs, [0.5, 0.5, 0.0, 0.0], rtol=1e-6)
+
+
+def test_aggregate_clients_dispatch():
+    rng = np.random.default_rng(2)
+    stacked = {"w": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+    imp = jnp.asarray([0.4, 0.3, 0.2, 0.1])
+    mask = jnp.ones((4,))
+    plain = wssl.aggregate_clients(stacked, imp, mask, WSSLConfig())
+    ref = wssl.weighted_average(
+        stacked, wssl.aggregation_weights(imp, mask, WSSLConfig()))
+    np.testing.assert_array_equal(np.asarray(plain["w"]),
+                                  np.asarray(ref["w"]))
+    tm_cfg = WSSLConfig(aggregation="trimmed_mean", trim_fraction=0.25)
+    tm = wssl.aggregate_clients(stacked, imp, mask, tm_cfg)
+    ref_tm = wssl.trimmed_mean_average(stacked, mask, 0.25)
+    np.testing.assert_array_equal(np.asarray(tm["w"]),
+                                  np.asarray(ref_tm["w"]))
