@@ -232,6 +232,61 @@ def _lcm(a: int, b: int) -> int:
 
 
 @dataclass(frozen=True)
+class AsyncRoundsConfig:
+    """Bounded-staleness asynchronous rounds (``core/async_round.py``).
+
+    ``deadline`` is measured in simulated client latencies: a clean client
+    finishes its round work at t=1.0, a straggler at ``slowdown`` ×4 at
+    t=4.0 (``repro.sim.faults.client_latencies``).  A client that misses
+    the deadline is *buffered*, not dropped: its update lands
+    ``ceil(latency / deadline) - 1`` rounds later, discounted by a
+    staleness weight that is fused into the aggregation coefficients
+    (``wssl.staleness_weights``).  ``deadline = inf`` disables the async
+    path entirely — the round is then bit-for-bit identical to the
+    synchronous ``wssl_round`` (golden-tested).
+    """
+
+    # round deadline in simulated client-latency units; inf = synchronous
+    deadline: float = float("inf")
+    # updates whose staleness would reach this bound are evicted instead of
+    # buffered — the client contributes exactly zero and is resynced
+    # (accounted as bytes_sync)
+    max_staleness: int = 4
+    # staleness → discount: "constant" (FedBuff-style, no decay),
+    # "polynomial" ((1+s)^-alpha, FedAsync), or "exponential" (e^{-alpha·s})
+    staleness_weighting: str = "polynomial"
+    staleness_alpha: float = 0.5
+    # max number of concurrently buffered (late) client updates; clients
+    # that would overflow the buffer are evicted + resynced.  None = one
+    # slot per client (the jit-static upper bound).
+    buffer_size: Optional[int] = None
+
+    _WEIGHTINGS = ("constant", "polynomial", "exponential")
+
+    def __post_init__(self):
+        if self.staleness_weighting not in self._WEIGHTINGS:
+            raise ValueError(
+                f"staleness_weighting {self.staleness_weighting!r} not in "
+                f"{self._WEIGHTINGS}")
+        if self.deadline <= 0:
+            raise ValueError("deadline must be positive (inf = synchronous)")
+        if self.max_staleness < 1:
+            raise ValueError("max_staleness must be >= 1")
+        if self.buffer_size is not None and self.buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1 (None = one slot "
+                             "per client)")
+
+    @property
+    def enabled(self) -> bool:
+        """True when the deadline is finite (the async path can buffer)."""
+        import math
+        return math.isfinite(self.deadline)
+
+    def replace(self, **kw) -> "AsyncRoundsConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class WSSLConfig:
     """Knobs of the paper's algorithm (Algorithms 1 & 2)."""
 
@@ -260,6 +315,9 @@ class WSSLConfig:
     aggregation: str = "importance"
     # fraction trimmed from each tail of the client axis (trimmed_mean only)
     trim_fraction: float = 0.1
+    # bounded-staleness async rounds (core/async_round.py); the default
+    # deadline=inf block is the synchronous algorithm, bit-for-bit
+    async_rounds: AsyncRoundsConfig = AsyncRoundsConfig()
     seed: int = 0
 
     def resolve_split(self, model: ModelConfig) -> int:

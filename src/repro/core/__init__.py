@@ -1,11 +1,15 @@
 """WSSL core: the paper's contribution.
 
-* wssl.py     — Algorithm 1 (importance, selection, weighted sampling) and
-                the Algorithm 2 weighted aggregation.
+* wssl.py     — Algorithm 1 (importance, selection, weighted sampling),
+                the Algorithm 2 weighted aggregation, and the staleness
+                discounts for bounded-staleness async rounds.
 * split.py    — the two-phase split fwd/bwd protocol (≡ end-to-end grad).
 * round.py    — one fused WSSL communication round for the transformer stack.
+* async_round.py — the bounded-staleness variant: round deadline,
+                stale-update buffer, staleness-weighted aggregation
+                (deadline=inf ≡ round.py, bit-for-bit).
 * paper_loop.py — paper-scale WSSL trainer (gait FFN / ResNet-18).
-* protocol.py — communication accounting.
+* protocol.py — communication accounting (incl. staleness columns).
 * fairness.py — participation / accuracy fairness metrics.
 """
 

@@ -1,0 +1,408 @@
+"""Bounded-staleness asynchronous WSSL rounds.
+
+The synchronous ``core/round.py::wssl_round`` is a barrier: every selected
+client's update lands in the round it was computed, and stragglers are
+modeled as partial progress.  This module replaces the barrier with a
+**round deadline** measured in simulated client latencies
+(``repro.sim.faults.client_latencies``): a clean client finishes at t=1.0,
+a 4×-slowdown straggler at t=4.0.  Per round:
+
+* clients that finish by the ``deadline`` contribute exactly as in the
+  synchronous round;
+* clients past the deadline are **buffered**, not dropped — their
+  post-optimizer update (Δ = θ_new − θ_old) is parked in ``AsyncState`` and
+  lands ``d = ceil(latency / deadline) − 1`` rounds later, applied to the
+  then-current global stage and discounted by a staleness weight
+  (``wssl.staleness_weights``, FedAsync/FedBuff-style) that is fused into
+  the aggregation coefficients via ``wssl.safe_aggregation_weights``;
+* updates whose staleness would reach ``max_staleness`` (and updates that
+  would overflow ``buffer_size``) are **evicted**: the client contributes
+  exactly zero and is resynced, accounted as ``bytes_sync``.
+
+Everything is jit-safe over the fixed client axis: the deadline,
+``max_staleness``, ``buffer_size``, and the staleness-decay ``alpha`` reach
+the traced round only as dynamic fp32 scalars (:class:`AsyncParams`), so
+one compiled executable serves every same-shape latency / deadline /
+staleness configuration — the same one-executable invariant as the fault
+system (PR 1) and the multi-hop pipeline (PR 2).
+
+Every async op is an exact identity at ``deadline = inf`` (multiplication
+by an all-ones on-time mask, ``jnp.where`` on all-false buffer masks, +0
+contributions), so the async-off round is **bit-for-bit identical** to
+``wssl_round`` — golden-tested in ``tests/test_round_regression.py``
+against ``tests/golden/round_async_off.npz``.  With a *finite* deadline the
+latency signal is reinterpreted: slow clients arrive late instead of
+contributing a scaled update (the straggler partial-progress scale is
+neutralized under ``jnp.where(isinf(deadline), ...)``); Byzantine
+amplification (``byz_scale``) still applies to whatever they send.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (AsyncRoundsConfig, ModelConfig, TrainConfig,
+                          WSSLConfig)
+from repro.core import wssl
+from repro.core.protocol import sync_round_bytes
+from repro.core.round import (RoundMetrics, WSSLState, _client_stage_bytes,
+                              _client_vmap, _per_client_losses)
+from repro.models import transformer as tf
+from repro.optim import clip_by_global_norm, make_optimizer
+from repro.sim import faults as sim_faults
+from repro.sharding import shard_activation
+
+Params = Any
+
+
+class AsyncParams(NamedTuple):
+    """Dynamic (traced) scalars of an AsyncRoundsConfig — the jit input.
+
+    Passing these as arguments (instead of closing over the config) keeps
+    every same-shape deadline / staleness setting on ONE compiled
+    executable; only the ``staleness_weighting`` *kind* is a static branch
+    (closed over by ``make_async_round_fn``)."""
+
+    deadline: jax.Array        # round deadline in client-latency units; inf = sync
+    max_staleness: jax.Array   # staleness bound (evict + resync at/above it)
+    buffer_size: jax.Array     # max concurrently buffered late updates
+    staleness_alpha: jax.Array # decay rate of the staleness weighting
+
+
+def async_params(cfg: AsyncRoundsConfig, num_clients: int) -> AsyncParams:
+    """Lower the config block to dynamic fp32 scalars."""
+    f = lambda v: jnp.asarray(v, jnp.float32)
+    size = num_clients if cfg.buffer_size is None else cfg.buffer_size
+    return AsyncParams(
+        deadline=f(cfg.deadline),
+        max_staleness=f(cfg.max_staleness),
+        buffer_size=f(size),
+        staleness_alpha=f(cfg.staleness_alpha),
+    )
+
+
+class AsyncState(NamedTuple):
+    """Per-client staleness bookkeeping + the stale-update buffer.
+
+    ``pending[i] == 0``  — idle (eligible for fresh work);
+    ``pending[i] == k>0`` — a buffered update lands k rounds from now
+    (``k == 1`` means it arrives *this* round and the slot frees after).
+    ``staleness[i]`` is the age the buffered update will have at arrival
+    (constant while parked — it equals the admission delay d).
+    ``buffer`` mirrors the stacked client stage and holds the parked
+    post-optimizer deltas; slots are zero whenever ``pending == 0``."""
+
+    pending: jax.Array      # (N,) int32
+    staleness: jax.Array    # (N,) int32
+    buffer: Params          # client-stack-shaped deltas, leaves (N, ...)
+
+
+class AsyncRoundMetrics(NamedTuple):
+    base: RoundMetrics          # the synchronous metrics (mask = fresh work)
+    on_time: jax.Array          # fresh clients that beat the deadline
+    buffered: jax.Array         # late clients newly admitted to the buffer
+    arrived: jax.Array          # stale updates applied this round
+    evicted: jax.Array          # too-stale / overflow clients (resynced)
+    mean_staleness: jax.Array   # mean staleness of this round's arrivals
+    bytes_resync: jax.Array     # eviction resync traffic (inside bytes_sync)
+
+
+def init_async_state(state: WSSLState) -> AsyncState:
+    """Empty buffer: every client idle, every slot zero."""
+    n = jax.tree.leaves(state.client_stack)[0].shape[0]
+    return AsyncState(
+        pending=jnp.zeros((n,), jnp.int32),
+        staleness=jnp.zeros((n,), jnp.int32),
+        buffer=jax.tree.map(jnp.zeros_like, state.client_stack),
+    )
+
+
+def _pc(vec: jax.Array, ref: jax.Array) -> jax.Array:
+    """Broadcast a (N,) vector against a (N, ...) leaf."""
+    return vec.reshape((-1,) + (1,) * (ref.ndim - 1))
+
+
+def async_wssl_round(state: WSSLState, astate: AsyncState,
+                     batch: Dict[str, jax.Array],
+                     val_batch: Optional[Dict[str, jax.Array]] = None,
+                     scenario: Optional["sim_faults.ScenarioParams"] = None,
+                     async_p: Optional[AsyncParams] = None, *,
+                     model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
+                     train_cfg: TrainConfig, schedule,
+                     impl: str = "chunked"
+                     ) -> Tuple[WSSLState, AsyncState, AsyncRoundMetrics]:
+    """One bounded-staleness communication round.
+
+    Mirrors ``wssl_round`` op-for-op (same batch/val contract, same fault
+    composition, same RNG streams — the async logic consumes no
+    randomness), inserting the deadline/buffer machinery as exact
+    identities at ``deadline = inf``.  Returns the new
+    ``(WSSLState, AsyncState)`` plus :class:`AsyncRoundMetrics`."""
+    n = wssl_cfg.num_clients
+    remat = train_cfg.remat
+    num_edges = len(state.edge_stages)
+    kind = wssl_cfg.async_rounds.staleness_weighting
+    if async_p is None:
+        async_p = async_params(wssl_cfg.async_rounds, n)
+    rng, rng_sel = jax.random.split(state.rng)
+
+    # ---- Algorithm 1: selection --------------------------------------
+    mask = wssl.participation_mask(rng_sel, state.importance, wssl_cfg,
+                                   state.round_index)
+
+    # ---- fault injection (repro.sim): dropout ⇒ zero-mask ---------------
+    plan = None
+    if scenario is not None:
+        plan = sim_faults.sample_fault_plan(
+            jax.random.fold_in(rng_sel, 0x0DD), scenario, n,
+            num_hops=num_edges, hop_replicas=wssl_cfg.hop_replicas)
+        mask = mask * plan.keep
+
+    # ---- deadline admission control -------------------------------------
+    # latency → rounds of delay before the update can land (0 = on time);
+    # at deadline = inf every delay is exactly 0 and all of this is the
+    # synchronous round, bit-for-bit.
+    lat = sim_faults.client_latencies(plan, n)
+    delay = jnp.maximum(jnp.ceil(lat / async_p.deadline) - 1.0, 0.0)
+    arriving = (astate.pending == 1).astype(jnp.float32)
+    idle = (astate.pending == 0).astype(jnp.float32)
+    mask = mask * idle                    # busy clients take no fresh work
+    on_time = mask * (delay == 0)
+    late = mask * (delay > 0)
+    # too stale to ever matter: evict at admission (w(s)=0 at s>=max)
+    evict_late = late * (delay >= async_p.max_staleness)
+    admit = late - evict_late
+    # bounded buffer: arrivals free their slot as the round begins
+    slots = (astate.pending > 1).sum().astype(jnp.float32)
+    order = jnp.cumsum(admit) - admit     # admitted strictly before i
+    overflow = admit * ((slots + order) >= async_p.buffer_size)
+    admit = admit - overflow
+    evicted = evict_late + overflow
+    part = on_time + admit                # fresh work this round
+
+    agg_w = wssl.aggregation_weights(state.importance, part, wssl_cfg)
+
+    tokens = shard_activation(batch["tokens"], "client", None, None)
+    labels = shard_activation(batch["labels"], "client", None, None)
+    if plan is not None:
+        labels = sim_faults.corrupt_labels(plan, labels, model_cfg.vocab_size)
+    embeds = batch.get("embeds")
+
+    # ---- split fwd / chained N-phase backward (as in wssl_round) --------
+    span = train_cfg.remat_span
+
+    def client_fn(cstack):
+        def one(cp, toks, emb):
+            return tf.client_forward(cp, model_cfg, toks, embeds=emb,
+                                     impl=impl, remat=remat, remat_span=span)
+        if embeds is not None:
+            return _client_vmap(one)(cstack, tokens, embeds)
+        return _client_vmap(lambda cp, t: one(cp, t, None))(cstack, tokens)
+
+    acts, client_vjp = jax.vjp(client_fn, state.client_stack)
+    acts = shard_activation(acts, "client", None, None, None)
+    hop_bytes = [acts.size // n * acts.dtype.itemsize]
+
+    x, edge_vjps = acts, []
+    edge_aux = jnp.zeros((), jnp.float32)
+    for j in range(num_edges):
+        def edge_fn(p, a, j=j):
+            return _client_vmap(
+                lambda pi, ai: tf.stage_forward(pi, model_cfg, ai, j + 1,
+                                                impl=impl, remat=remat,
+                                                remat_span=span,
+                                                with_aux=True),
+                in_axes=(None, 0))(p, a)
+        (x, aux_j), vjp = jax.vjp(edge_fn, state.edge_stages[j], x)
+        x = shard_activation(x, "client", None, None, None)
+        edge_aux = edge_aux + aux_j.mean()
+        edge_vjps.append(vjp)
+        hop_bytes.append(x.size // n * x.dtype.itemsize)
+
+    def server_loss(sp, a):
+        losses, aux = _per_client_losses(model_cfg, sp, a, labels, impl,
+                                         remat, span)
+        total = jnp.sum(agg_w * part * losses) + aux
+        return total, losses
+
+    (loss, pcl), (g_server, g_x) = jax.value_and_grad(
+        server_loss, argnums=(0, 1), has_aux=True)(state.server_params, x)
+    loss = loss + edge_aux
+
+    aux_ct = jnp.full((n,), 1.0 / n, jnp.float32)
+    g_edges = []
+    for vjp in reversed(edge_vjps):
+        g_e, g_x = vjp((g_x, aux_ct))
+        g_edges.append(g_e)
+    g_edges.reverse()
+    (g_client,) = client_vjp(g_x)
+
+    if train_cfg.grad_clip:
+        g_client, _ = clip_by_global_norm(g_client, train_cfg.grad_clip)
+        g_server, _ = clip_by_global_norm(g_server, train_cfg.grad_clip)
+        g_edges = [clip_by_global_norm(g, train_cfg.grad_clip)[0]
+                   for g in g_edges]
+
+    if plan is not None:
+        g_client = sim_faults.corrupt_client_grads(
+            plan, g_client, jax.random.fold_in(rng_sel, 0xBAD))
+
+    # ---- optimizer (masked to this round's fresh workers) ---------------
+    _, opt_update = make_optimizer(train_cfg.optimizer)
+    lr = schedule(state.round_index)
+    new_cstack, new_opt_c = opt_update(
+        state.client_stack, g_client, state.opt_client, lr=lr,
+        weight_decay=train_cfg.weight_decay, mask=part)
+    new_server, new_opt_s = opt_update(
+        state.server_params, g_server, state.opt_server, lr=lr,
+        weight_decay=train_cfg.weight_decay)
+    new_edges, new_opt_e = [], []
+    for ep, ge, oe in zip(state.edge_stages, g_edges, state.opt_edge):
+        ne, no = opt_update(ep, ge, oe, lr=lr,
+                            weight_decay=train_cfg.weight_decay)
+        new_edges.append(ne)
+        new_opt_e.append(no)
+    if plan is not None:
+        # with a finite deadline the latency signal is modeled as *when*
+        # the update lands, not how much of it — neutralize the straggler
+        # partial-progress scale (Byzantine amplification still applies)
+        eff_scale = jnp.where(jnp.isinf(async_p.deadline),
+                              plan.grad_scale, jnp.ones_like(plan.grad_scale))
+        new_cstack = sim_faults.scale_client_updates(
+            plan._replace(grad_scale=eff_scale), new_cstack,
+            state.client_stack)
+    # a round in which every client missed the deadline (or dropped) must
+    # leave the shared stages untouched — no CE signal, and the aux term +
+    # weight decay must not step them.  Unlike the sync round this guard is
+    # unconditional: a tight deadline can empty the round without any
+    # fault plan, and at deadline=inf the where() is an exact identity.
+    alive = part.sum() > 0
+    keep_old = lambda new, old: jax.tree.map(
+        lambda a, b: jnp.where(alive, a, b), new, old)
+    new_server = keep_old(new_server, state.server_params)
+    new_opt_s = keep_old(new_opt_s, state.opt_server)
+    new_edges = tuple(keep_old(ne, oe)
+                      for ne, oe in zip(new_edges, state.edge_stages))
+    new_opt_e = tuple(keep_old(no, oo)
+                      for no, oo in zip(new_opt_e, state.opt_edge))
+
+    # ---- validation on the server-held ζ → importance ------------------
+    if val_batch is not None:
+        vt, vl = val_batch["tokens"], val_batch["labels"]
+
+        def val_one(cp):
+            a = tf.client_forward(cp, model_cfg, vt, impl=impl, remat=remat)
+            for j in range(num_edges):
+                a = tf.stage_forward(new_edges[j], model_cfg, a, j + 1,
+                                     impl=impl, remat=remat)
+            loss, _ = tf.server_loss(new_server, model_cfg, a, vl,
+                                     impl=impl, remat=remat)
+            return loss
+
+        val_losses = _client_vmap(val_one)(new_cstack)
+        importance = wssl.compute_importance(val_losses, wssl_cfg,
+                                             prev=state.importance)
+    else:
+        val_losses = jnp.zeros((n,), jnp.float32)
+        importance = state.importance
+
+    # ---- stale-update delivery + weighted aggregation --------------------
+    # an arriving client applies its parked delta to the *current* global
+    # stage (classic stale-gradient application); its coefficient carries
+    # the staleness discount, fused into the aggregation weights
+    contrib = wssl.async_contribution(on_time, arriving, astate.staleness,
+                                      async_p.max_staleness, kind=kind,
+                                      alpha=async_p.staleness_alpha)
+
+    def _deliver(new, old, buf):
+        arr = _pc(arriving, new) > 0
+        stale = (old.astype(jnp.float32)
+                 + buf.astype(jnp.float32)).astype(new.dtype)
+        return jnp.where(arr, stale, new)
+
+    agg_stack = jax.tree.map(_deliver, new_cstack, state.client_stack,
+                             astate.buffer)
+    agg_mask = contrib
+    if wssl_cfg.aggregation == "trimmed_mean":
+        # the trimmed mean is an unweighted robust statistic — staleness
+        # gates membership only (w(s) > 0), it cannot scale a vote
+        agg_mask = (contrib > 0).astype(jnp.float32)
+    global_client = wssl.aggregate_clients(agg_stack, importance, agg_mask,
+                                           wssl_cfg, safe=True)
+    presync_cstack = new_cstack     # the round's actual local updates
+    new_cstack = wssl.broadcast_global(new_cstack, global_client)
+
+    # ---- buffer / counter update ----------------------------------------
+    # parked deltas are measured on the *pre-sync* stacks — the local
+    # update the late client actually computed, before broadcast_global
+    # reset every stack to the aggregated global
+    def _park(new, old, buf):
+        delta = (new.astype(jnp.float32)
+                 - old.astype(jnp.float32)).astype(buf.dtype)
+        keep = _pc((astate.pending > 1).astype(jnp.float32), buf) > 0
+        parked = jnp.where(keep, buf, jnp.zeros_like(buf))
+        return jnp.where(_pc(admit, buf) > 0, delta, parked)
+
+    new_buffer = jax.tree.map(_park, presync_cstack, state.client_stack,
+                              astate.buffer)
+    d_i32 = delay.astype(jnp.int32)
+    new_pending = jnp.where(admit > 0, d_i32,
+                            jnp.maximum(astate.pending - 1, 0))
+    new_staleness = jnp.where(admit > 0, d_i32,
+                              jnp.where(astate.pending > 1,
+                                        astate.staleness, 0))
+
+    # ---- communication accounting --------------------------------------
+    sel = part.sum()
+    n_arrived = arriving.sum()
+    n_evicted = evicted.sum()
+    bytes_per_hop = sel * jnp.asarray(hop_bytes, jnp.float32)
+    stage_bytes = jnp.asarray(_client_stage_bytes(state.client_stack, n),
+                              jnp.float32)
+    bytes_resync = n_evicted * stage_bytes
+    metrics = RoundMetrics(
+        loss=loss, per_client_loss=pcl * part, val_loss=val_losses,
+        mask=part, importance=importance,
+        bytes_up=bytes_per_hop.sum(), bytes_down=bytes_per_hop.sum(),
+        bytes_per_hop=bytes_per_hop,
+        bytes_sync=sync_round_bytes(on_time.sum() + n_arrived, n,
+                                    stage_bytes) + bytes_resync,
+    )
+    amet = AsyncRoundMetrics(
+        base=metrics,
+        on_time=on_time.sum(),
+        buffered=admit.sum(),
+        arrived=n_arrived,
+        evicted=n_evicted,
+        mean_staleness=((arriving * astate.staleness).sum()
+                        / jnp.maximum(n_arrived, 1.0)),
+        bytes_resync=bytes_resync,
+    )
+    new_state = WSSLState(
+        client_stack=new_cstack, server_params=new_server,
+        edge_stages=new_edges, opt_client=new_opt_c, opt_server=new_opt_s,
+        opt_edge=new_opt_e, importance=importance,
+        round_index=state.round_index + 1, rng=rng)
+    new_astate = AsyncState(pending=new_pending, staleness=new_staleness,
+                            buffer=new_buffer)
+    return new_state, new_astate, amet
+
+
+def make_async_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
+                        train_cfg: TrainConfig, impl: str = "chunked"):
+    """jit-ready async round with static configs closed over.
+
+    The returned function takes ``(state, astate, batch, val_batch,
+    scenario_params, async_params)`` — both params pytrees are dynamic, so
+    one compiled executable serves every same-shape latency scenario and
+    every deadline / staleness bound."""
+    from repro.optim.schedule import make_schedule
+    schedule = make_schedule(train_cfg.schedule, train_cfg.learning_rate,
+                             train_cfg.warmup_steps, train_cfg.rounds)
+    return functools.partial(async_wssl_round, model_cfg=model_cfg,
+                             wssl_cfg=wssl_cfg, train_cfg=train_cfg,
+                             schedule=schedule, impl=impl)

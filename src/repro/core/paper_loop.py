@@ -157,12 +157,28 @@ def train_wssl(adapter: ModelAdapter,
     strag_steps = max(1, int(round(local_steps / max(sc.straggler_slowdown,
                                                     1.0))))
 
+    # ---- bounded-staleness async rounds (mirrors core/async_round.py) ---
+    # with a finite deadline the straggler slowdown becomes an *arrival
+    # time* (slow clients do full local work but land it late), so the
+    # reduced-local-steps model is off; with deadline = inf this whole
+    # branch is inert and the loop below is the synchronous algorithm.
+    acfg = wssl_cfg.async_rounds
+    async_on = acfg.enabled
+    latency = np.asarray([sc.straggler_slowdown if i in stragglers else 1.0
+                          for i in range(n)], np.float64)
+    arrival_delay = (np.maximum(np.ceil(latency / acfg.deadline) - 1, 0)
+                     .astype(int) if async_on else np.zeros(n, int))
+    buffer_cap = n if acfg.buffer_size is None else acfg.buffer_size
+    parked: Dict[int, Any] = {}   # client -> [rounds_left, staleness, delta]
+
     importance = jnp.full((n,), 1.0 / n, jnp.float32)
     participation = np.zeros(n)
     history: Dict[str, Any] = {"round": [], "test_acc": [], "test_loss": [],
                                "val_loss": [], "selected": [], "dropped": [],
                                "importance": [], "bytes_up": [],
-                               "bytes_sync": [], "scenario": sc.name}
+                               "bytes_sync": [], "scenario": sc.name,
+                               "arrived": [], "buffered": [], "evicted": [],
+                               "mean_staleness": []}
     xv, yv = jnp.asarray(val["x"]), jnp.asarray(val["y"])
     xt, yt = jnp.asarray(test["x"]), jnp.asarray(test["y"])
 
@@ -181,12 +197,38 @@ def train_wssl(adapter: ModelAdapter,
         dropped = [i for i in sel
                    if fault_rng.random() < sc.dropout_prob]
         sel = [i for i in sel if i not in dropped]
+        # async: clients with an update in flight take no fresh work, and
+        # this round's stale arrivals are collected before training
+        sel = [i for i in sel if i not in parked]
+        arrivals = {i: p for i, p in parked.items() if p[0] == 1}
+        # eviction is decided at admission, exactly as in the fused round:
+        # a client whose update would land at/over max_staleness (or
+        # overflow the buffer) contributes zero EVERYWHERE this round —
+        # it must not touch the shared server stage either, so it is
+        # excluded before local training, not after
+        evicted_now: List[int] = []
+        if async_on:
+            free_slots = buffer_cap - (len(parked) - len(arrivals))
+            for i in sel:
+                d = int(arrival_delay[i])
+                if d > 0 and (d >= acfg.max_staleness or free_slots <= 0):
+                    evicted_now.append(i)
+                elif d > 0:
+                    free_slots -= 1
+            sel = [i for i in sel if i not in evicted_now]
+        n_evicted = len(evicted_now)
         participation[sel] += 1
+        # every client starts the round on the synced global stage
+        global_prev = clients[0]
 
         # ---- Algorithm 2: local split training ------------------------
         round_bytes = 0
+        late = []
         for i in sel:
-            steps_i = strag_steps if i in stragglers else local_steps
+            # a finite deadline models slowness as lateness: full local
+            # work, delivered arrival_delay[i] rounds later
+            steps_i = (local_steps if async_on
+                       else strag_steps if i in stragglers else local_steps)
             start = clients[i]
             for s in range(steps_i):
                 b = loaders[i].next_batch()
@@ -208,11 +250,26 @@ def train_wssl(adapter: ModelAdapter,
                 f = float(sc.grad_scale_factor)
                 clients[i] = jax.tree.map(
                     lambda old, new: old + f * (new - old), start, clients[i])
-        sync_bytes = protocol.sync_round_bytes(len(sel), n,
-                                               client_stage_bytes)
+            if async_on and arrival_delay[i] > 0:
+                # past the deadline: park the local update and revert the
+                # visible stage — the delta is not in this round's
+                # aggregate (eviction was already decided at admission)
+                delta = jax.tree.map(lambda new, old: new - old,
+                                     clients[i], start)
+                late.append((i, int(arrival_delay[i]), delta))
+                clients[i] = start
+        on_time = [i for i in sel if not (async_on and arrival_delay[i] > 0)]
+        resync_bytes = n_evicted * client_stage_bytes
+        sync_bytes = protocol.sync_round_bytes(
+            len(on_time) + len(arrivals), n,
+            client_stage_bytes) + resync_bytes
+        mean_stale = (float(np.mean([p[1] for p in arrivals.values()]))
+                      if arrivals else 0.0)
         comm.record(r, len(sel), bytes_up=round_bytes // 2,
                     bytes_down=round_bytes // 2, bytes_sync=sync_bytes,
-                    bytes_per_hop=(round_bytes // 2,))
+                    bytes_per_hop=(round_bytes // 2,),
+                    arrived=len(arrivals), mean_staleness=mean_stale,
+                    buffered=len(late), evicted=n_evicted)
 
         # ---- validation → importance ----------------------------------
         val_losses = jnp.stack([evaluate(clients[i], server, xv, yv)[0]
@@ -221,12 +278,26 @@ def train_wssl(adapter: ModelAdapter,
                                              prev=importance)
 
         # ---- weighted aggregation + sync --------------------------------
-        mask = (wssl.selection_mask(jnp.asarray(sel, jnp.int32), n)
-                if sel else jnp.zeros((n,), jnp.float32))
-        coefs = wssl.safe_aggregation_weights(importance, mask, wssl_cfg)
+        # async: a stale arrival applies its parked delta to the current
+        # global stage and joins at a staleness-discounted coefficient —
+        # the discount fuses into the aggregation weights
+        contrib = np.zeros(n, np.float32)
+        contrib[on_time] = 1.0
+        for i, (_, staleness, delta) in arrivals.items():
+            contrib[i] = float(wssl.staleness_weights(
+                jnp.asarray(staleness, jnp.float32), acfg.max_staleness,
+                kind=acfg.staleness_weighting, alpha=acfg.staleness_alpha))
+            clients[i] = jax.tree.map(lambda g, dl: g + dl, global_prev,
+                                      delta)
+        coefs = wssl.safe_aggregation_weights(importance,
+                                              jnp.asarray(contrib), wssl_cfg)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
         global_client = wssl.weighted_average(stacked, coefs)
         clients = [jax.tree.map(jnp.copy, global_client) for _ in range(n)]
+        # advance the buffer clock: arrivals leave, admissions enter
+        parked = {i: [p[0] - 1, p[1], p[2]] for i, p in parked.items()
+                  if p[0] > 1}
+        parked.update({i: [d, d, delta] for i, d, delta in late})
 
         # ---- evaluation of the global model ------------------------------
         tl, ta = evaluate(global_client, server, xt, yt)
@@ -239,6 +310,10 @@ def train_wssl(adapter: ModelAdapter,
         history["importance"].append([float(v) for v in importance])
         history["bytes_up"].append(round_bytes)
         history["bytes_sync"].append(sync_bytes)
+        history["arrived"].append(sorted(arrivals))
+        history["buffered"].append(sorted(i for i, _, _ in late))
+        history["evicted"].append(n_evicted)
+        history["mean_staleness"].append(mean_stale)
 
     history["participation"] = participation.tolist()
     history["bytes_up_total"] = sum(history["bytes_up"])

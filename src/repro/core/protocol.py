@@ -36,6 +36,14 @@ class RoundComm:
     # per hop crossing (client→edge₀, …, edge→server); () for untracked /
     # classic single-cut logs, where bytes_up is the only crossing
     bytes_per_hop: Tuple[int, ...] = ()
+    # bounded-staleness async rounds (core/async_round.py): stale updates
+    # applied this round, their mean staleness, late updates newly parked,
+    # and too-stale / buffer-overflow clients evicted + resynced.  All zero
+    # on synchronous (deadline = inf) logs.
+    arrived: int = 0
+    mean_staleness: float = 0.0
+    buffered: int = 0
+    evicted: int = 0
 
     @property
     def total(self) -> int:
@@ -48,10 +56,14 @@ class CommLog:
 
     def record(self, round_index: int, selected: int, bytes_up: int,
                bytes_down: int, bytes_sync: int = 0,
-               bytes_per_hop: Sequence[int] = ()) -> None:
+               bytes_per_hop: Sequence[int] = (), arrived: int = 0,
+               mean_staleness: float = 0.0, buffered: int = 0,
+               evicted: int = 0) -> None:
         self.rounds.append(RoundComm(round_index, selected, int(bytes_up),
                                      int(bytes_down), int(bytes_sync),
-                                     tuple(int(b) for b in bytes_per_hop)))
+                                     tuple(int(b) for b in bytes_per_hop),
+                                     int(arrived), float(mean_staleness),
+                                     int(buffered), int(evicted)))
 
     @property
     def total_bytes(self) -> int:
@@ -60,6 +72,11 @@ class CommLog:
     @property
     def num_hops(self) -> int:
         return max((len(r.bytes_per_hop) for r in self.rounds), default=0)
+
+    @property
+    def is_async(self) -> bool:
+        """True if any round carried staleness traffic."""
+        return any(r.arrived or r.buffered or r.evicted for r in self.rounds)
 
     def summary(self) -> Dict[str, float]:
         if not self.rounds:
@@ -77,6 +94,14 @@ class CommLog:
             vals = [r.bytes_per_hop[h] for r in self.rounds
                     if len(r.bytes_per_hop) > h]
             out[f"mean_hop{h}_MB"] = float(np.mean(vals)) / 1e6
+        if self.is_async:
+            arr = [r.arrived for r in self.rounds]
+            out["stale_arrivals"] = float(np.sum(arr))
+            out["mean_staleness"] = float(
+                np.sum([r.arrived * r.mean_staleness for r in self.rounds])
+                / max(np.sum(arr), 1))
+            out["evictions"] = float(np.sum([r.evicted
+                                             for r in self.rounds]))
         return out
 
 

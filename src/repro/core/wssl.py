@@ -126,6 +126,56 @@ def safe_aggregation_weights(weights: jax.Array, mask: jax.Array,
     return jnp.where(mask.sum() > 0, w, full)
 
 
+# ---------------------------------------------------------------------------
+# Bounded-staleness discounts (async rounds, core/async_round.py)
+# ---------------------------------------------------------------------------
+
+
+def staleness_weights(staleness: jax.Array, max_staleness,
+                      kind: str = "polynomial",
+                      alpha=0.5) -> jax.Array:
+    """Per-client staleness discount w(s) ∈ [0, 1] for buffered updates.
+
+    ``s = 0`` (fresh, on-time) maps to exactly 1.0 under every ``kind``, so
+    the synchronous round is untouched; ``s >= max_staleness`` maps to
+    exactly 0.0 — an update that stale contributes *nothing* (the async
+    round evicts + resyncs such clients).  Between the two ends:
+
+    * ``constant``     — 1.0 (FedBuff-style: buffered, not discounted)
+    * ``polynomial``   — (1 + s)^-alpha  (FedAsync's polynomial family)
+    * ``exponential``  — exp(-alpha · s)
+
+    ``max_staleness`` and ``alpha`` may be traced scalars so every
+    same-shape deadline/staleness configuration shares one executable; the
+    ``kind`` is a static branch."""
+    s = jnp.asarray(staleness, jnp.float32)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    if kind == "constant":
+        base = jnp.ones_like(s)
+    elif kind == "polynomial":
+        base = jnp.power(1.0 + s, -alpha)
+    elif kind == "exponential":
+        base = jnp.exp(-alpha * s)
+    else:
+        raise ValueError(f"unknown staleness weighting {kind!r}")
+    return jnp.where(s < jnp.asarray(max_staleness, jnp.float32), base, 0.0)
+
+
+def async_contribution(fresh_mask: jax.Array, arriving_mask: jax.Array,
+                       staleness: jax.Array, max_staleness,
+                       kind: str = "polynomial", alpha=0.5) -> jax.Array:
+    """The (N,) *fractional* participation mask of a bounded-staleness round.
+
+    Fresh on-time clients contribute at weight 1, clients whose buffered
+    update arrives this round at ``staleness_weights(s)``, everyone else at
+    0.  Feeding this through :func:`safe_aggregation_weights` fuses the
+    staleness discount into the aggregation coefficients, so a client's
+    share decays in both its validation-loss importance *and* its
+    staleness — and the coefficients still sum to 1."""
+    w = staleness_weights(staleness, max_staleness, kind=kind, alpha=alpha)
+    return fresh_mask + arriving_mask * w
+
+
 def weighted_average(stacked: Params, coefs: jax.Array, *,
                      use_kernel: bool = False) -> Params:
     """θ_global = Σ_i w_i θ_i over the stacked client axis (leaf dim 0)."""
@@ -152,10 +202,26 @@ def trimmed_mean_average(stacked: Params, mask: jax.Array,
     jit-safe with a dynamic mask: dead clients sort to +inf and a rank
     window [k, s-k) selects the kept values — shapes never change.  With an
     empty mask it falls back to the trimmed mean over *all* clients (clients
-    start each round synchronized, so that is a no-op sync)."""
-    m = jnp.where(mask.sum() > 0, mask, jnp.ones_like(mask))
+    start each round synchronized, so that is a no-op sync).
+
+    The mask may be *fractional* (async rounds discount stale arrivals, so
+    a contribution mask like [0.3, 0, 0, 0] is legal): any strictly
+    positive entry counts as a full participant here — the trimmed mean is
+    an unweighted robust statistic, so the discount gates membership only.
+    Without that coarsening, a sub-unit survivor count s < 1 would drive
+    the trim bound ``floor((s-1)/2)`` negative and the rank window would
+    admit a dead client's +inf sentinel, zeroing nothing and infecting the
+    whole global stage with inf."""
+    alive_count = (mask > 0).sum()
+    m = jnp.where(alive_count > 0, (mask > 0).astype(jnp.float32),
+                  jnp.ones_like(mask))
     s = m.sum()
-    k = jnp.clip(jnp.floor(trim_fraction * s), 0.0, jnp.floor((s - 1) / 2))
+    # guard both ends: trim never below 0 and never past the point where
+    # the kept window [k, s-k) would be empty (s=1 ⇒ k=0, even s ⇒ k ≤
+    # s/2 - 1, odd s ⇒ k ≤ (s-1)/2) — floor((s-1)/2) can go negative only
+    # for s < 1, which the binarized mask above rules out
+    k = jnp.clip(jnp.floor(trim_fraction * s), 0.0,
+                 jnp.maximum(jnp.floor((s - 1) / 2), 0.0))
 
     def one(a):
         n = a.shape[0]

@@ -144,6 +144,22 @@ def _per_client(vec: jax.Array, ref: jax.Array) -> jax.Array:
     return vec.reshape((-1,) + (1,) * (ref.ndim - 1))
 
 
+def client_latencies(plan, num_clients: int) -> jax.Array:
+    """Per-client simulated round completion time, in units of a clean
+    client's round (t = 1.0).
+
+    The async round (``core/async_round.py``) measures its deadline on this
+    clock.  Latency is the inverse of the plan's partial-progress scale —
+    the same signal the synchronous round uses for straggler update
+    scaling, reinterpreted as *when* the full update lands instead of *how
+    much* of it does: a client at 4× slowdown (or routed through a 4×-slow
+    edge hop, whichever is worse) finishes at t = 4.0.  ``plan=None`` (no
+    scenario) is a homogeneous population, all at t = 1.0."""
+    if plan is None:
+        return jnp.ones((num_clients,), jnp.float32)
+    return 1.0 / jnp.clip(plan.grad_scale, 1e-6, 1.0)
+
+
 def label_shift(num_classes: int) -> int:
     """The label-flip attack's class shift — shared by the jit path here and
     the host-side paper loop so the two stay in lockstep."""

@@ -43,6 +43,16 @@ register_scenario(Scenario(name="noniid-dirichlet", skew_alpha=0.1))
 register_scenario(Scenario(name="edge-dropout", hop_dropout_prob=0.3))
 register_scenario(Scenario(name="edge-latency", hop_latency_prob=0.5,
                            hop_latency_slowdown=4.0))
+# latency-dominated populations for bounded-staleness async rounds
+# (core/async_round.py): under a finite deadline the slowdown becomes an
+# *arrival time* — 8× stragglers land rounds late (or are evicted), instead
+# of dragging the synchronous aggregate with 1/8-progress updates.  Both
+# presets run under the synchronous round too (same shapes, one executable).
+register_scenario(Scenario(name="async-stragglers", straggler_fraction=0.5,
+                           straggler_slowdown=8.0))
+register_scenario(Scenario(name="async-byzantine", sign_flip_fraction=0.25,
+                           straggler_fraction=0.25,
+                           straggler_slowdown=8.0))
 
 
 def get_scenario(name: str) -> Scenario:

@@ -1,0 +1,333 @@
+"""Bounded-staleness async rounds (core/async_round.py): staleness-weight
+properties, coefficient normalization under the fused discount, the
+max-staleness zero-contribution guarantee, buffer/deadline mechanics, live
+sync-equivalence at deadline=inf, and the one-executable invariant across
+latency / deadline / staleness configurations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro.config import (AsyncRoundsConfig, ModelConfig, Scenario,
+                          TrainConfig, WSSLConfig)
+from repro.core import wssl
+from repro.core.async_round import (AsyncParams, async_params,
+                                    init_async_state, make_async_round_fn)
+from repro.core.round import init_state, make_round_fn
+from repro.data.synthetic import lm_batch
+from repro.sim import (client_latencies, get_scenario, list_scenarios,
+                       sample_fault_plan, scenario_params)
+
+TINY = ModelConfig(name="tiny-async", num_layers=2, d_model=32, num_heads=2,
+                   num_kv_heads=2, d_ff=64, vocab_size=64,
+                   dtype="float32", param_dtype="float32")
+
+KINDS = ("constant", "polynomial", "exponential")
+
+
+def _setup(deadline=2.0, max_staleness=4, kind="polynomial", buffer_size=None,
+           frac=1.0, n=4, **wkw):
+    a = AsyncRoundsConfig(deadline=deadline, max_staleness=max_staleness,
+                          staleness_weighting=kind, buffer_size=buffer_size)
+    w = WSSLConfig(num_clients=n, participation_fraction=frac,
+                   async_rounds=a, **wkw)
+    t = TrainConfig(remat=False, learning_rate=1e-3, warmup_steps=0,
+                    schedule="constant")
+    state, _ = init_state(jax.random.PRNGKey(0), TINY, w, t)
+    astate = init_async_state(state)
+    rf = jax.jit(make_async_round_fn(TINY, w, t, impl="dense"))
+    return w, t, state, astate, rf, async_params(a, n)
+
+
+def _mk_batch(n, b, s, seed, shared=True):
+    d = lm_batch(b if shared else n * b, s, TINY.vocab_size, seed=seed)
+    toks, labs = jnp.asarray(d["tokens"]), jnp.asarray(d["labels"])
+    if shared:
+        return {"tokens": jnp.broadcast_to(toks[None], (n, b, s)),
+                "labels": jnp.broadcast_to(labs[None], (n, b, s))}
+    return {"tokens": toks.reshape(n, b, s), "labels": labs.reshape(n, b, s)}
+
+
+def _val_batch(s=16):
+    d = lm_batch(4, s, TINY.vocab_size, seed=999)
+    return {"tokens": jnp.asarray(d["tokens"]),
+            "labels": jnp.asarray(d["labels"])}
+
+
+# ---------------------------------------------------------------------------
+# staleness weights (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(max_staleness=st.integers(1, 12), alpha=st.floats(0.01, 3.0),
+       kind=st.sampled_from(KINDS))
+def test_staleness_weights_monotone_nonincreasing(max_staleness, alpha, kind):
+    """w(s) must never increase in s, start at exactly 1, stay in [0, 1],
+    and be exactly 0 at and beyond max_staleness."""
+    s = jnp.arange(0, max_staleness + 4, dtype=jnp.float32)
+    w = np.asarray(wssl.staleness_weights(s, max_staleness, kind=kind,
+                                          alpha=alpha))
+    assert w[0] == 1.0                       # fresh updates are undiscounted
+    assert (np.diff(w) <= 1e-7).all(), w     # monotone non-increasing
+    assert (w >= 0.0).all() and (w <= 1.0).all()
+    assert (w[max_staleness:] == 0.0).all()  # hard zero at the bound
+
+
+def test_staleness_weight_kinds_are_distinct():
+    s = jnp.arange(1, 4, dtype=jnp.float32)
+    const = np.asarray(wssl.staleness_weights(s, 10, kind="constant"))
+    poly = np.asarray(wssl.staleness_weights(s, 10, kind="polynomial",
+                                             alpha=0.5))
+    expo = np.asarray(wssl.staleness_weights(s, 10, kind="exponential",
+                                             alpha=0.5))
+    np.testing.assert_array_equal(const, 1.0)
+    np.testing.assert_allclose(poly, (1.0 + np.arange(1, 4)) ** -0.5,
+                               rtol=1e-6)
+    np.testing.assert_allclose(expo, np.exp(-0.5 * np.arange(1, 4)),
+                               rtol=1e-6)
+    # exponential decays at least as fast as polynomial for s >= 1
+    assert (expo <= poly + 1e-7).all()
+    with pytest.raises(ValueError):
+        wssl.staleness_weights(s, 10, kind="no-such-kind")
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 1000),
+       kind=st.sampled_from(KINDS), max_staleness=st.integers(1, 6))
+def test_async_coefficients_sum_to_one(n, seed, kind, max_staleness):
+    """The staleness-discounted contribution mask, pushed through
+    safe_aggregation_weights, must still yield a convex combination:
+    Σ coefs == 1, zero for non-participants, and never negative — for any
+    mix of fresh / arriving / idle clients and any staleness vector."""
+    rng = np.random.default_rng(seed)
+    imp = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
+    role = rng.integers(0, 3, size=n)           # 0 idle, 1 fresh, 2 arriving
+    fresh = jnp.asarray(role == 1, jnp.float32)
+    arriving = jnp.asarray(role == 2, jnp.float32)
+    staleness = jnp.asarray(rng.integers(1, max_staleness + 2, size=n),
+                            jnp.float32)
+    contrib = wssl.async_contribution(fresh, arriving, staleness,
+                                      max_staleness, kind=kind)
+    cfg = WSSLConfig(num_clients=n)
+    coefs = np.asarray(wssl.safe_aggregation_weights(imp, contrib, cfg))
+    assert abs(coefs.sum() - 1.0) < 1e-5
+    assert (coefs >= 0).all()
+    if float(contrib.sum()) > 0:                # no empty-mask fallback
+        assert (coefs[np.asarray(role) == 0] == 0).all()
+        dead = (np.asarray(role) == 2) & \
+               (np.asarray(staleness) >= max_staleness)
+        assert (coefs[dead] == 0).all()
+
+
+def test_max_staleness_contributes_exactly_zero():
+    """A buffered update at max_staleness must contribute *exactly* zero to
+    the aggregated global stage before the resync: poison the buffer slot
+    with a huge delta and compare against a zeroed buffer — bit-for-bit."""
+    w, t, state, astate, rf, ap = _setup(deadline=2.0, max_staleness=3)
+    poisoned = astate._replace(
+        pending=jnp.asarray([1, 0, 0, 0], jnp.int32),
+        staleness=jnp.asarray([3, 0, 0, 0], jnp.int32),   # == max_staleness
+        buffer=jax.tree.map(lambda b: b.at[0].set(1e6), astate.buffer))
+    clean = astate._replace(pending=poisoned.pending,
+                            staleness=poisoned.staleness)
+    batch, val = _mk_batch(4, 2, 16, seed=0), _val_batch()
+    s_p, a_p, m_p = rf(state, poisoned, batch, val, None, ap)
+    s_c, a_c, m_c = rf(state, clean, batch, val, None, ap)
+    for a, b in zip(jax.tree.leaves(s_p.client_stack),
+                    jax.tree.leaves(s_c.client_stack)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.isfinite(np.asarray(jax.tree.leaves(s_p.client_stack)[0])).all()
+    # the slot is freed afterwards (resync complete, client idle again)
+    assert int(a_p.pending[0]) == 0 and int(a_p.staleness[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# deadline / buffer mechanics
+# ---------------------------------------------------------------------------
+
+def test_latency_clock_from_fault_plan():
+    """client_latencies inverts the plan's partial-progress scale: clean
+    clients at t=1, stragglers at t=slowdown; plan=None is homogeneous."""
+    np.testing.assert_array_equal(np.asarray(client_latencies(None, 5)), 1.0)
+    sp = scenario_params(Scenario(straggler_fraction=0.5,
+                                  straggler_slowdown=4.0))
+    plan = sample_fault_plan(jax.random.PRNGKey(0), sp, 4)
+    np.testing.assert_allclose(np.asarray(client_latencies(plan, 4)),
+                               [1.0, 1.0, 4.0, 4.0], rtol=1e-6)
+
+
+def test_late_clients_buffer_then_arrive_discounted():
+    """4× stragglers under deadline=2 miss by one round: buffered at round
+    r, arriving at r+1 with staleness 1, busy (unselectable) in between."""
+    w, t, state, astate, rf, ap = _setup(deadline=2.0)
+    sp = scenario_params(get_scenario("stragglers"))     # clients 2,3 at 4x
+    batch, val = _mk_batch(4, 2, 16, seed=0), _val_batch()
+    s1, a1, m1 = rf(state, astate, batch, val, sp, ap)
+    assert float(m1.on_time) == 2.0 and float(m1.buffered) == 2.0
+    assert float(m1.arrived) == 0.0 and float(m1.evicted) == 0.0
+    np.testing.assert_array_equal(np.asarray(a1.pending), [0, 0, 1, 1])
+    np.testing.assert_array_equal(np.asarray(a1.staleness), [0, 0, 1, 1])
+    # a parked slot must hold the actual local update (nonzero delta)
+    assert any(np.abs(np.asarray(l)[2:]).max() > 0
+               for l in jax.tree.leaves(a1.buffer))
+    s2, a2, m2 = rf(s1, a1, _mk_batch(4, 2, 16, seed=1), val, sp, ap)
+    assert float(m2.arrived) == 2.0 and float(m2.mean_staleness) == 1.0
+    # busy clients take no fresh work while their update is in flight
+    np.testing.assert_array_equal(np.asarray(m2.base.mask), [1, 1, 0, 0])
+    np.testing.assert_array_equal(np.asarray(a2.pending), [0, 0, 0, 0])
+    for leaf in jax.tree.leaves(a2.buffer):
+        np.testing.assert_array_equal(np.asarray(leaf)[2:], 0.0)
+
+
+def test_too_stale_clients_evicted_and_resynced():
+    """8× stragglers under deadline=1 would arrive at staleness 7 ≥
+    max_staleness=4: evicted at admission, nothing buffered, resync bytes
+    accounted on top of the synchronous sync traffic."""
+    w, t, state, astate, rf, ap = _setup(deadline=1.0, max_staleness=4)
+    sp = scenario_params(get_scenario("async-stragglers"))   # 2 clients @ 8x
+    s1, a1, m1 = rf(state, astate, _mk_batch(4, 2, 16, seed=0), _val_batch(),
+                    sp, ap)
+    assert float(m1.evicted) == 2.0 and float(m1.buffered) == 0.0
+    np.testing.assert_array_equal(np.asarray(a1.pending), 0)
+    stage_bytes = sum(np.asarray(l)[0].size * np.asarray(l).dtype.itemsize
+                      for l in jax.tree.leaves(state.client_stack))
+    assert float(m1.bytes_resync) == 2.0 * stage_bytes
+    # bytes_sync = (on_time + arrived + N) × stage + resync
+    assert float(m1.base.bytes_sync) == (2 + 4) * stage_bytes + \
+        float(m1.bytes_resync)
+
+
+def test_buffer_size_cap_evicts_overflow():
+    """With buffer_size=1 only one of two late clients may park; the other
+    is evicted (resynced), never silently dropped."""
+    w, t, state, astate, rf, ap = _setup(deadline=2.0, buffer_size=1)
+    sp = scenario_params(get_scenario("stragglers"))
+    s1, a1, m1 = rf(state, astate, _mk_batch(4, 2, 16, seed=0), _val_batch(),
+                    sp, ap)
+    assert float(m1.buffered) == 1.0 and float(m1.evicted) == 1.0
+    assert int(np.asarray(a1.pending).sum()) == 1
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError):
+        AsyncRoundsConfig(staleness_weighting="linear")
+    with pytest.raises(ValueError):
+        AsyncRoundsConfig(deadline=0.0)
+    with pytest.raises(ValueError):
+        AsyncRoundsConfig(max_staleness=0)
+    with pytest.raises(ValueError):
+        AsyncRoundsConfig(buffer_size=0)
+    assert not AsyncRoundsConfig().enabled
+    assert AsyncRoundsConfig(deadline=2.0).enabled
+
+
+# ---------------------------------------------------------------------------
+# sync equivalence + one executable
+# ---------------------------------------------------------------------------
+
+def test_deadline_inf_equals_sync_round_live_under_scenario():
+    """Beyond the golden artifact: at deadline=inf the async round must
+    match the synchronous round bit-for-bit *live*, including under a
+    latency scenario (where the straggler partial-progress scale must pass
+    through untouched)."""
+    w, t, state, astate, rf, ap = _setup(deadline=float("inf"), frac=0.5)
+    sync_rf = jax.jit(make_round_fn(TINY, w, t, impl="dense"))
+    batch, val = _mk_batch(4, 2, 16, seed=0, shared=False), _val_batch()
+    for sp in (None, scenario_params(get_scenario("stragglers")),
+               scenario_params(get_scenario("async-byzantine"))):
+        s_sync, m_sync = sync_rf(state, batch, val, sp)
+        s_async, a2, m_async = rf(state, astate, batch, val, sp, ap)
+        for a, b in zip(jax.tree.leaves(s_sync), jax.tree.leaves(s_async)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(m_sync),
+                        jax.tree.leaves(m_async.base)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_one_executable_serves_all_latency_and_deadline_scenarios():
+    """Dropout, latency, per-hop, Byzantine, and async-deadline scenarios
+    with identical shapes — across finite and infinite deadlines, staleness
+    bounds, and decay rates — must share ONE compiled async round."""
+    w, t, state, astate, rf, ap = _setup(deadline=2.0)
+    batch, val = _mk_batch(4, 2, 16, seed=0), _val_batch()
+    names = list_scenarios()
+    assert "async-stragglers" in names and "async-byzantine" in names
+    for name in names:
+        sp = scenario_params(get_scenario(name))
+        for acfg in (AsyncRoundsConfig(),                       # = inf
+                     AsyncRoundsConfig(deadline=2.0),
+                     AsyncRoundsConfig(deadline=1.0, max_staleness=2,
+                                       staleness_alpha=1.5, buffer_size=2)):
+            rf(state, astate, batch, val, sp, async_params(acfg, 4))
+    assert rf._cache_size() == 1
+
+
+def test_paper_loop_async_buffers_and_arrives():
+    """The host-side paper loop mirrors the fused semantics: under a
+    finite deadline 8× stragglers park their full local update and land it
+    one round late (deadline=4 ⇒ staleness 1), visible in the history and
+    CommLog staleness columns; a deadline=1 run evicts them instead."""
+    from repro.configs.wssl_paper import GaitConfig
+    from repro.core.paper_loop import gait_adapter, train_wssl
+    from repro.data.partition import partition_for_scenario
+    from repro.data.pipeline import ClientLoader
+    from repro.data.synthetic import make_gait_like
+
+    data = make_gait_like(n=1200, seed=0)
+    tr = {k: v[:800] for k, v in data.items()}
+    val = {k: v[800:1000] for k, v in data.items()}
+    test = {k: v[1000:] for k, v in data.items()}
+    sc = get_scenario("async-stragglers")           # clients 2,3 at 8x
+    parts = partition_for_scenario(tr["y"], 4, sc, seed=0)
+    loaders = [ClientLoader({"x": tr["x"], "y": tr["y"]}, p, 64, seed=i)
+               for i, p in enumerate(parts)]
+
+    def run(deadline):
+        return train_wssl(
+            gait_adapter(GaitConfig()), loaders, val, test,
+            WSSLConfig(num_clients=4, participation_fraction=1.0,
+                       async_rounds=AsyncRoundsConfig(deadline=deadline,
+                                                      max_staleness=4)),
+            rounds=4, local_steps=4, lr=2e-3, scenario=sc)
+
+    h = run(4.0)        # ceil(8/4)-1 = 1 round late
+    assert h["buffered"][0] == [2, 3] and h["arrived"][0] == []
+    assert h["arrived"][1] == [2, 3] and h["mean_staleness"][1] == 1.0
+    assert sum(h["evicted"]) == 0
+    assert h["comm"]["stale_arrivals"] >= 2
+    assert h["comm"]["mean_staleness"] == 1.0
+    h1 = run(1.0)       # ceil(8/1)-1 = 7 >= max_staleness: evicted
+    assert sum(h1["evicted"]) > 0
+    assert all(a == [] for a in h1["arrived"])
+    # eviction resync traffic shows up in the sync accounting
+    assert h1["bytes_sync"][0] > 0
+
+
+def test_async_beats_sync_under_async_stragglers():
+    """The acceptance property, in miniature: under the async-stragglers
+    preset (half the population at 8× slowdown) a bounded-staleness
+    deadline must reach a better final validation loss than the
+    synchronous round, whose aggregate is dragged by 1/8-progress
+    stragglers at full coefficient."""
+    w, t, state, astate, rf, ap = _setup(
+        deadline=1.0, max_staleness=2,
+        importance_temp=0.1, importance_ema=0.8)
+    t_fast = TrainConfig(remat=False, learning_rate=3e-3, warmup_steps=0,
+                         schedule="constant")
+    state, _ = init_state(jax.random.PRNGKey(0), TINY, w, t_fast)
+    astate = init_async_state(state)
+    rf = jax.jit(make_async_round_fn(TINY, w, t_fast, impl="dense"))
+    sync_rf = jax.jit(make_round_fn(TINY, w, t_fast, impl="dense"))
+    sp = scenario_params(get_scenario("async-stragglers"))
+    val = _val_batch()
+    s_a, a_a = state, astate
+    s_s = state
+    for r in range(8):
+        batch = _mk_batch(4, 2, 16, seed=r)
+        s_a, a_a, m_a = rf(s_a, a_a, batch, val, sp, ap)
+        s_s, m_s = sync_rf(s_s, batch, val, sp)
+    async_vl = float(np.asarray(m_a.base.val_loss).mean())
+    sync_vl = float(np.asarray(m_s.val_loss).mean())
+    assert async_vl < sync_vl, (async_vl, sync_vl)

@@ -234,6 +234,42 @@ def test_trimmed_mean_respects_mask():
     np.testing.assert_allclose(np.asarray(out["w"]), 2.0, rtol=1e-6)
 
 
+def test_trimmed_mean_all_but_one_masked():
+    """The all-but-one-masked edge: with a single survivor, any trim
+    fraction (even the degenerate >= 0.5 ones, where trimming k from each
+    tail would eliminate every survivor) must return exactly the
+    survivor's stage — never a zeroed or inf-infected global."""
+    rng = np.random.default_rng(7)
+    a = rng.normal(size=(6, 4, 3)).astype(np.float32)
+    mask = jnp.asarray([0.0, 0.0, 0.0, 1.0, 0.0, 0.0])
+    for trim in (0.0, 0.1, 0.25, 0.5, 0.9, 1.0):
+        out = wssl.trimmed_mean_average({"w": jnp.asarray(a)}, mask, trim)
+        np.testing.assert_array_equal(np.asarray(out["w"]), a[3],
+                                      err_msg=f"trim={trim}")
+
+
+def test_trimmed_mean_fractional_single_survivor_guard():
+    """Async rounds hand trimmed_mean_average *fractional* contribution
+    masks (staleness-discounted arrivals).  A sub-unit survivor count
+    s < 1 used to drive the trim bound floor((s-1)/2) negative, letting a
+    dead client's +inf sentinel into the kept window and infecting the
+    whole global stage with inf — the guard binarizes membership, so any
+    strictly positive contribution is one full vote."""
+    rng = np.random.default_rng(8)
+    a = rng.normal(size=(4, 5)).astype(np.float32)
+    stacked = {"w": jnp.asarray(a)}
+    for frac in (0.3, 0.7):
+        out = wssl.trimmed_mean_average(
+            stacked, jnp.asarray([0.0, 0.0, frac, 0.0]), 0.25)
+        assert np.isfinite(np.asarray(out["w"])).all(), frac
+        np.testing.assert_array_equal(np.asarray(out["w"]), a[2])
+    # fractional multi-survivor masks average the alive rows, unweighted
+    out = wssl.trimmed_mean_average(
+        stacked, jnp.asarray([0.5, 0.0, 0.25, 0.0]), 0.0)
+    np.testing.assert_allclose(np.asarray(out["w"]), (a[0] + a[2]) / 2,
+                               rtol=1e-6)
+
+
 def test_trimmed_mean_empty_mask_and_jit_safety():
     """Empty mask falls back to all clients (finite, no NaN), and the mask
     is a dynamic argument — one trace serves every mask."""
