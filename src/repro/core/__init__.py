@@ -1,8 +1,11 @@
 """WSSL core: the paper's contribution.
 
 * wssl.py     — Algorithm 1 (importance, selection, weighted sampling),
-                the Algorithm 2 weighted aggregation, and the staleness
-                discounts for bounded-staleness async rounds.
+                the Algorithm 2 aggregation coefficients, and the
+                staleness discounts for bounded-staleness async rounds.
+* aggregation.py — the pluggable robust-aggregation registry (importance /
+                uniform / trimmed_mean / median / krum / multi_krum) every
+                round variant dispatches Algorithm 2 step 5 through.
 * split.py    — the two-phase split fwd/bwd protocol (≡ end-to-end grad).
 * round.py    — one fused WSSL communication round for the transformer stack.
 * async_round.py — the bounded-staleness variant: round deadline,
@@ -13,4 +16,4 @@
 * fairness.py — participation / accuracy fairness metrics.
 """
 
-from repro.core import fairness, protocol, split, wssl  # noqa: F401
+from repro.core import aggregation, fairness, protocol, split, wssl  # noqa: F401

@@ -1,0 +1,350 @@
+"""Pluggable robust-aggregation subsystem (Algorithm 2 step 5).
+
+The weighted global aggregation is WSSL's robustness surface.  This module
+makes it a single policy layer: an **aggregator registry** whose entries
+are jit-safe masked rules over the stacked client axis, all with the same
+signature
+
+    rule(stacked, importance, mask, params, *, safe, use_kernel) -> Params
+
+* ``stacked``    — client-stage pytree, leaves ``(N, ...)``
+* ``importance`` — ``(N,)`` normalized importance weights (Algorithm 1)
+* ``mask``       — ``(N,)`` participation mask; may be *fractional*
+                   (bounded-staleness rounds fuse the staleness discount
+                   into it, ``wssl.async_contribution``)
+* ``params``     — :class:`AggParams`, the rule knobs lowered to *dynamic*
+                   fp32 scalars, so one compiled executable serves every
+                   same-shape ``trim_fraction`` / ``byzantine_f`` /
+                   ``multi_krum_m`` setting
+
+**Weighted** rules (``importance``, ``uniform``) turn the mask into
+normalized coefficients — a fractional (staleness-discounted) entry scales
+that client's share.  **Robust** rules (``trimmed_mean``, ``median``,
+``krum``, ``multi_krum``) are unweighted statistics: any strictly positive
+mask entry is one full vote (membership gating), and an empty mask falls
+back to all clients — clients start each round synchronized, so that is a
+no-op sync rather than a zeroed global stage.
+
+``core/round.py``, ``core/async_round.py``, and ``core/paper_loop.py`` all
+dispatch through :func:`aggregate_clients`; there are no per-rule branches
+in the round implementations.  ``rule="importance"`` and
+``rule="trimmed_mean"`` through this dispatch are bit-for-bit identical to
+the pre-registry code (golden-tested in ``tests/test_round_regression.py``).
+
+Defense/attack map (see docs/aggregation.md for the full table): the
+importance mean survives *detectable* corruption (label flip, gradient
+noise — validation loss exposes them) but not model poisoning
+(``scaled_gradient``); trimmed mean / median drop coordinate outliers;
+krum / multi-krum discard whole poisoned updates by pairwise-distance
+geometry, which also catches the ``adaptive_scaled`` adversary
+(``repro.sim.faults.adaptive_scale_updates``) that stays inside the honest
+spread and therefore evades importance down-weighting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AggregationConfig, WSSLConfig
+from repro.core import wssl
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Dynamic rule parameters
+# ---------------------------------------------------------------------------
+
+
+class AggParams(NamedTuple):
+    """Dynamic (traced) scalars of an AggregationConfig — the jit input.
+
+    Passing these as arguments (instead of baking them into the trace)
+    keeps every same-shape tolerance setting on ONE compiled executable;
+    only the rule *name* is a static branch."""
+
+    trim_fraction: jax.Array   # per-tail trim fraction (trimmed_mean)
+    byzantine_f: jax.Array     # assumed Byzantine count (krum/multi_krum)
+    multi_krum_m: jax.Array    # candidates to average; 0.0 = auto (s - f)
+
+
+def agg_params(cfg: AggregationConfig) -> AggParams:
+    """Lower the config block to dynamic fp32 scalars."""
+    f = lambda v: jnp.asarray(v, jnp.float32)
+    m = 0.0 if cfg.multi_krum_m is None else cfg.multi_krum_m
+    return AggParams(trim_fraction=f(cfg.trim_fraction),
+                     byzantine_f=f(cfg.byzantine_f),
+                     multi_krum_m=f(m))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+AggregatorFn = Callable[..., Params]
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    name: str
+    fn: AggregatorFn
+    # True: coefficients scale contributions (the staleness discount fuses
+    # into the mean); False: unweighted robust statistic, fractional mask
+    # entries gate membership only.
+    weighted: bool
+    doc: str = ""
+
+
+_AGGREGATORS: Dict[str, Aggregator] = {}
+
+
+def register_aggregator(name: str, *, weighted: bool = False,
+                        doc: str = "") -> Callable[[AggregatorFn],
+                                                   AggregatorFn]:
+    """Register ``fn(stacked, importance, mask, params, *, safe,
+    use_kernel)`` under ``name``.  Later registrations override earlier
+    ones (user rules can shadow built-ins)."""
+    def deco(fn: AggregatorFn) -> AggregatorFn:
+        _AGGREGATORS[name] = Aggregator(name=name, fn=fn, weighted=weighted,
+                                        doc=doc or (fn.__doc__ or ""))
+        return fn
+    return deco
+
+
+def get_aggregator(name: str) -> Aggregator:
+    if name not in _AGGREGATORS:
+        raise KeyError(f"unknown aggregator {name!r}; known: "
+                       f"{list_aggregators()}")
+    return _AGGREGATORS[name]
+
+
+def list_aggregators() -> List[str]:
+    return sorted(_AGGREGATORS)
+
+
+# ---------------------------------------------------------------------------
+# Shared masked-statistic machinery
+# ---------------------------------------------------------------------------
+
+
+def _membership(mask: jax.Array) -> jax.Array:
+    """Binarized membership with the empty-mask fallback.
+
+    Robust rules are unweighted statistics, so a fractional
+    (staleness-discounted) mask entry counts as a full participant; with
+    no participants at all, every client votes (a no-op sync — clients
+    start each round synchronized)."""
+    alive = (mask > 0).astype(jnp.float32)
+    return jnp.where(alive.sum() > 0, alive, jnp.ones_like(mask))
+
+
+def trimmed_mean_average(stacked: Params, mask: jax.Array,
+                         trim_fraction=0.1) -> Params:
+    """Coordinate-wise trimmed mean over the *masked* client axis.
+
+    The classic Byzantine-robust aggregation rule: per parameter coordinate,
+    drop the k lowest and k highest surviving values (k = ⌊trim·s⌋ for s
+    participants, capped so at least one survives) and average the rest.
+    jit-safe with a dynamic mask AND a dynamic trim fraction: dead clients
+    sort to +inf and a rank window [k, s-k) selects the kept values —
+    shapes never change.  Fractional masks gate membership only (see
+    :func:`_membership`): a sub-unit survivor count s < 1 would drive the
+    trim bound ``floor((s-1)/2)`` negative and the rank window would admit
+    a dead client's +inf sentinel, zeroing nothing and infecting the whole
+    global stage with inf."""
+    m = _membership(mask)
+    s = m.sum()
+    # guard both ends: trim never below 0 and never past the point where
+    # the kept window [k, s-k) would be empty (s=1 ⇒ k=0, even s ⇒ k ≤
+    # s/2 - 1, odd s ⇒ k ≤ (s-1)/2) — floor((s-1)/2) can go negative only
+    # for s < 1, which the binarized mask above rules out
+    k = jnp.clip(jnp.floor(trim_fraction * s), 0.0,
+                 jnp.maximum(jnp.floor((s - 1) / 2), 0.0))
+
+    def one(a):
+        n = a.shape[0]
+        tail = (1,) * (a.ndim - 1)
+        alive = m.reshape((n,) + tail) > 0
+        vals = jnp.where(alive, a.astype(jnp.float32), jnp.inf)
+        srt = jnp.sort(vals, axis=0)
+        rank = jnp.arange(n, dtype=jnp.float32).reshape((n,) + tail)
+        inc = (rank >= k) & (rank < s - k)
+        kept = jnp.where(inc, srt, 0.0)
+        return (kept.sum(axis=0) / jnp.maximum(s - 2.0 * k, 1.0)
+                ).astype(a.dtype)
+
+    return jax.tree.map(one, stacked)
+
+
+def median_average(stacked: Params, mask: jax.Array) -> Params:
+    """Coordinate-wise masked median over the client axis.
+
+    Implemented as the maximal trimmed mean: with ``trim_fraction = 0.5``
+    the clamped per-tail trim ``k = min(⌊s/2⌋, ⌊(s-1)/2⌋)`` leaves a kept
+    window of exactly one value for odd s (the median) and exactly two for
+    even s (averaged — the standard even-count median), so the whole
+    masked-sort / +inf-sentinel machinery (and its edge-case guards) is
+    shared with :func:`trimmed_mean_average`."""
+    return trimmed_mean_average(stacked, mask, 0.5)
+
+
+def _flat_clients(stacked: Params) -> jax.Array:
+    """Stack every leaf's client-row into one (N, D) fp32 matrix."""
+    leaves = jax.tree.leaves(stacked)
+    n = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def krum_scores(stacked: Params, mask: jax.Array,
+                byzantine_f) -> jax.Array:
+    """Per-client Krum scores over the masked client axis.
+
+    Client i's score is the sum of its squared distances (on the flattened
+    client-stage vector) to its k nearest *surviving* neighbours, with
+    ``k = s - f - 2`` clamped to ``[1, s - 1]`` — for ``f >= s - 2`` the
+    score degenerates gracefully to the nearest-neighbour distance instead
+    of an empty (undefined) neighbourhood.  Dead clients score +inf, and
+    distances to dead clients are +inf (they can never be anyone's
+    neighbour).  ``byzantine_f`` may be a traced scalar."""
+    flat = _flat_clients(stacked)
+    n = flat.shape[0]
+    m = _membership(mask)
+    alive = m > 0
+    s = m.sum()
+    # Gram-matrix form keeps memory at N·D + N² (an (N, N, D) difference
+    # tensor would be gigabytes for paper-scale stages); clamp the tiny
+    # cancellation negatives
+    x2 = (flat * flat).sum(-1)
+    sq = jnp.maximum(x2[:, None] + x2[None, :] - 2.0 * (flat @ flat.T),
+                     0.0)                            # (N, N)
+    valid = (alive[None, :] & alive[:, None]
+             & ~jnp.eye(n, dtype=bool))
+    d = jnp.where(valid, sq, jnp.inf)
+    srt = jnp.sort(d, axis=1)                        # ascending, inf last
+    k = jnp.clip(s - jnp.asarray(byzantine_f, jnp.float32) - 2.0,
+                 1.0, jnp.maximum(s - 1.0, 1.0))
+    rank = jnp.arange(n, dtype=jnp.float32)[None, :]
+    # a lone survivor has no finite neighbour at all: its kept window is
+    # empty (score 0), which still beats every dead client's +inf
+    kept = jnp.where((rank < k) & jnp.isfinite(srt), srt, 0.0)
+    return jnp.where(alive, kept.sum(axis=1), jnp.inf)
+
+
+def krum_average(stacked: Params, mask: jax.Array, byzantine_f) -> Params:
+    """Krum: return exactly the stage of the lowest-scored surviving
+    client (ties break to the lowest index via argmin)."""
+    scores = krum_scores(stacked, mask, byzantine_f)
+    i_star = jnp.argmin(scores)
+    return jax.tree.map(lambda a: a[i_star], stacked)
+
+
+def multi_krum_average(stacked: Params, mask: jax.Array, byzantine_f,
+                       multi_krum_m=0.0) -> Params:
+    """Multi-Krum: unweighted mean of the ``m`` lowest-scored survivors.
+
+    ``m`` may be a traced scalar; ``m <= 0`` selects the classic default
+    ``s - f``, and any value is clamped to ``[1, s]`` so the selection can
+    never reach a dead (+inf-scored) client.  ``m = 1`` coincides with
+    Krum up to the mean-of-one; ``m = s`` is the uniform masked mean."""
+    scores = krum_scores(stacked, mask, byzantine_f)
+    s = _membership(mask).sum()
+    f = jnp.asarray(byzantine_f, jnp.float32)
+    m_raw = jnp.asarray(multi_krum_m, jnp.float32)
+    m_sel = jnp.clip(jnp.where(m_raw > 0, m_raw, s - f), 1.0, s)
+    order = jnp.argsort(scores)                      # stable: ties by index
+    picked = (jnp.zeros_like(scores)
+              .at[order].set((jnp.arange(scores.shape[0],
+                                         dtype=jnp.float32) < m_sel)
+                             .astype(jnp.float32)))
+    coefs = picked / jnp.maximum(picked.sum(), 1.0)
+    return wssl.weighted_average(stacked, coefs)
+
+
+# ---------------------------------------------------------------------------
+# Built-in registry entries (uniform signature)
+# ---------------------------------------------------------------------------
+
+
+def _mean_rule(stacked, importance, mask, *, use_importance, safe,
+               use_kernel):
+    coef_fn = (wssl.safe_mean_coefficients if safe
+               else wssl.mean_coefficients)
+    coefs = coef_fn(importance, mask, use_importance=use_importance)
+    return wssl.weighted_average(stacked, coefs, use_kernel=use_kernel)
+
+
+@register_aggregator("importance", weighted=True,
+                     doc="importance-weighted mean (the paper's rule)")
+def _importance_rule(stacked, importance, mask, params, *, safe=False,
+                     use_kernel=False):
+    return _mean_rule(stacked, importance, mask, use_importance=True,
+                      safe=safe, use_kernel=use_kernel)
+
+
+@register_aggregator("uniform", weighted=True,
+                     doc="unweighted mean over the participation mask")
+def _uniform_rule(stacked, importance, mask, params, *, safe=False,
+                  use_kernel=False):
+    return _mean_rule(stacked, importance, mask, use_importance=False,
+                      safe=safe, use_kernel=use_kernel)
+
+
+@register_aggregator("trimmed_mean",
+                     doc="coordinate-wise trimmed mean (per-tail "
+                         "trim_fraction)")
+def _trimmed_mean_rule(stacked, importance, mask, params, *, safe=False,
+                       use_kernel=False):
+    return trimmed_mean_average(stacked, mask, params.trim_fraction)
+
+
+@register_aggregator("median", doc="coordinate-wise masked median")
+def _median_rule(stacked, importance, mask, params, *, safe=False,
+                 use_kernel=False):
+    return median_average(stacked, mask)
+
+
+@register_aggregator("krum",
+                     doc="Krum: single client nearest its s-f-2 neighbours")
+def _krum_rule(stacked, importance, mask, params, *, safe=False,
+               use_kernel=False):
+    return krum_average(stacked, mask, params.byzantine_f)
+
+
+@register_aggregator("multi_krum",
+                     doc="mean of the m lowest-scored Krum candidates")
+def _multi_krum_rule(stacked, importance, mask, params, *, safe=False,
+                     use_kernel=False):
+    return multi_krum_average(stacked, mask, params.byzantine_f,
+                              params.multi_krum_m)
+
+
+# ---------------------------------------------------------------------------
+# The one dispatch every round variant uses
+# ---------------------------------------------------------------------------
+
+
+def aggregate_clients(stacked: Params, importance: jax.Array,
+                      mask: jax.Array, cfg: WSSLConfig, *,
+                      safe: bool = False, use_kernel: bool = False,
+                      params: Optional[AggParams] = None) -> Params:
+    """Dispatch Algorithm 2 step 5 through the aggregator registry.
+
+    ``cfg.resolve_aggregation()`` names the rule (legacy
+    ``cfg.aggregation`` strings delegate); ``params`` lets a caller thread
+    pre-lowered dynamic :class:`AggParams` through a jit boundary so one
+    executable serves every same-shape ``f`` / trim / ``m`` setting.
+    ``safe`` selects the empty-mask fallback for the weighted rules
+    (fault-injected rounds can drop every selected client); robust rules
+    carry their fallback internally and accept fractional
+    (staleness-discounted) masks as membership."""
+    acfg = cfg.resolve_aggregation()
+    agg = get_aggregator(acfg.rule)
+    p = agg_params(acfg) if params is None else params
+    return agg.fn(stacked, importance, mask, p, safe=safe,
+                  use_kernel=use_kernel)

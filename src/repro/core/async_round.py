@@ -47,7 +47,7 @@ import jax.numpy as jnp
 
 from repro.config import (AsyncRoundsConfig, ModelConfig, TrainConfig,
                           WSSLConfig)
-from repro.core import wssl
+from repro.core import aggregation, wssl
 from repro.core.protocol import sync_round_bytes
 from repro.core.round import (RoundMetrics, WSSLState, _client_stage_bytes,
                               _client_vmap, _per_client_losses)
@@ -130,7 +130,8 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
                      batch: Dict[str, jax.Array],
                      val_batch: Optional[Dict[str, jax.Array]] = None,
                      scenario: Optional["sim_faults.ScenarioParams"] = None,
-                     async_p: Optional[AsyncParams] = None, *,
+                     async_p: Optional[AsyncParams] = None,
+                     agg_p: Optional["aggregation.AggParams"] = None, *,
                      model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
                      train_cfg: TrainConfig, schedule,
                      impl: str = "chunked"
@@ -150,16 +151,28 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
         async_p = async_params(wssl_cfg.async_rounds, n)
     rng, rng_sel = jax.random.split(state.rng)
 
-    # ---- Algorithm 1: selection --------------------------------------
-    mask = wssl.participation_mask(rng_sel, state.importance, wssl_cfg,
-                                   state.round_index)
-
-    # ---- fault injection (repro.sim): dropout ⇒ zero-mask ---------------
+    # ---- fault injection (repro.sim): sampled first so the latency
+    # signal can reach the selection draw (fold_in keeps the Gumbel draw
+    # untouched) ----------------------------------------------------------
     plan = None
     if scenario is not None:
         plan = sim_faults.sample_fault_plan(
             jax.random.fold_in(rng_sel, 0x0DD), scenario, n,
             num_hops=num_edges, hop_replicas=wssl_cfg.hop_replicas)
+
+    # ---- Algorithm 1: selection.  select_staleness_beta > 0 folds a
+    # busy/slow penalty into the Gumbel-top-k logits — in-flight clients
+    # (pending rounds) and high-latency clients lose priority at the draw
+    # instead of being masked after it. ----------------------------------
+    penalty = None
+    if wssl_cfg.select_staleness_beta:
+        penalty = (sim_faults.client_latencies(plan, n) - 1.0
+                   + astate.pending.astype(jnp.float32))
+    mask = wssl.participation_mask(rng_sel, state.importance, wssl_cfg,
+                                   state.round_index, penalty=penalty)
+
+    # dropout ⇒ zero-mask
+    if plan is not None:
         mask = mask * plan.keep
 
     # ---- deadline admission control -------------------------------------
@@ -275,6 +288,11 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
         new_cstack = sim_faults.scale_client_updates(
             plan._replace(grad_scale=eff_scale), new_cstack,
             state.client_stack)
+        # adaptive adversaries craft mean(honest) − z·std(honest) from this
+        # round's fresh workers (exact identity when no client is adaptive)
+        new_cstack = sim_faults.adaptive_scale_updates(plan, new_cstack,
+                                                       state.client_stack,
+                                                       part)
     # a round in which every client missed the deadline (or dropped) must
     # leave the shared stages untouched — no CE signal, and the aux term +
     # weight decay must not step them.  Unlike the sync round this guard is
@@ -326,13 +344,12 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
 
     agg_stack = jax.tree.map(_deliver, new_cstack, state.client_stack,
                              astate.buffer)
-    agg_mask = contrib
-    if wssl_cfg.aggregation == "trimmed_mean":
-        # the trimmed mean is an unweighted robust statistic — staleness
-        # gates membership only (w(s) > 0), it cannot scale a vote
-        agg_mask = (contrib > 0).astype(jnp.float32)
-    global_client = wssl.aggregate_clients(agg_stack, importance, agg_mask,
-                                           wssl_cfg, safe=True)
+    # registry dispatch (core/aggregation.py): weighted rules fuse the
+    # fractional staleness discount into their coefficients; robust rules
+    # (trimmed_mean/median/krum/...) binarize membership internally — a
+    # stale vote counts fully or not at all, never at a fraction
+    global_client = aggregation.aggregate_clients(
+        agg_stack, importance, contrib, wssl_cfg, safe=True, params=agg_p)
     presync_cstack = new_cstack     # the round's actual local updates
     new_cstack = wssl.broadcast_global(new_cstack, global_client)
 
@@ -397,9 +414,10 @@ def make_async_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
     """jit-ready async round with static configs closed over.
 
     The returned function takes ``(state, astate, batch, val_batch,
-    scenario_params, async_params)`` — both params pytrees are dynamic, so
-    one compiled executable serves every same-shape latency scenario and
-    every deadline / staleness bound."""
+    scenario_params, async_params, agg_params)`` — all three params
+    pytrees are dynamic, so one compiled executable serves every
+    same-shape latency scenario, every deadline / staleness bound, and
+    every aggregation trim/f/m setting."""
     from repro.optim.schedule import make_schedule
     schedule = make_schedule(train_cfg.schedule, train_cfg.learning_rate,
                              train_cfg.warmup_steps, train_cfg.rounds)

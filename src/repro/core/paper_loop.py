@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import Scenario, WSSLConfig
-from repro.core import protocol, wssl
+from repro.core import aggregation, protocol, wssl
 from repro.core.split import split_grads
 from repro.data.pipeline import ClientLoader
 from repro.optim import adamw_init, adamw_update
@@ -148,6 +148,7 @@ def train_wssl(adapter: ModelAdapter,
     noisy_clients = set(sc.noise_ids(n))
     sflip_clients = set(sc.sign_flip_ids(n))
     scaled_clients = set(sc.grad_scale_ids(n))
+    adaptive_clients = set(sc.adaptive_ids(n))
     stragglers = set(sc.straggler_ids(n))
     fault_rng = np.random.default_rng(sc.seed + 7919 * seed + 1)
     noise_rng = jax.random.PRNGKey(sc.seed + 7919 * seed + 2)
@@ -190,8 +191,16 @@ def train_wssl(adapter: ModelAdapter,
 
     for r in range(rounds):
         # ---- Algorithm 1: selection (round-0 rule lives in wssl) ------
+        # select_staleness_beta > 0: busy (parked) and slow clients pay a
+        # penalty in the Gumbel-top-k logits, mirroring the fused rounds
         rng, sub = jax.random.split(rng)
-        idx, _ = wssl.select_clients(sub, importance, wssl_cfg, r)
+        pen = None
+        if wssl_cfg.select_staleness_beta:
+            pen = jnp.asarray(
+                [latency[i] - 1.0 + (parked[i][0] if i in parked else 0)
+                 for i in range(n)], jnp.float32)
+        idx, _ = wssl.select_clients(sub, importance, wssl_cfg, r,
+                                     penalty=pen)
         sel = sorted(int(i) for i in np.asarray(idx))
         # transient failures: selected clients drop out of the round
         dropped = [i for i in sel
@@ -259,6 +268,23 @@ def train_wssl(adapter: ModelAdapter,
                 late.append((i, int(arrival_delay[i]), delta))
                 clients[i] = start
         on_time = [i for i in sel if not (async_on and arrival_delay[i] > 0)]
+        # adaptive adversaries craft their sent stage from this round's
+        # on-time honest updates: global + mean(Δ_honest) − z·std(Δ_honest)
+        # (ALIE style — inside the honest spread, evading importance
+        # down-weighting; mirrors sim_faults.adaptive_scale_updates)
+        adaptive_now = [i for i in on_time if i in adaptive_clients]
+        honest_now = [i for i in on_time if i not in adaptive_clients]
+        if adaptive_now and honest_now:
+            hstack = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[jax.tree.map(lambda new, old: new - old, clients[i],
+                               global_prev) for i in honest_now])
+            z = float(sc.adaptive_margin)
+            crafted = jax.tree.map(
+                lambda g, d: g + d.mean(0) - z * d.std(0),
+                global_prev, hstack)
+            for i in adaptive_now:
+                clients[i] = jax.tree.map(jnp.copy, crafted)
         resync_bytes = n_evicted * client_stage_bytes
         sync_bytes = protocol.sync_round_bytes(
             len(on_time) + len(arrivals), n,
@@ -289,10 +315,12 @@ def train_wssl(adapter: ModelAdapter,
                 kind=acfg.staleness_weighting, alpha=acfg.staleness_alpha))
             clients[i] = jax.tree.map(lambda g, dl: g + dl, global_prev,
                                       delta)
-        coefs = wssl.safe_aggregation_weights(importance,
-                                              jnp.asarray(contrib), wssl_cfg)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
-        global_client = wssl.weighted_average(stacked, coefs)
+        # registry dispatch (core/aggregation.py) — the same policy layer
+        # as the fused rounds, so the paper loop gets every robust rule
+        # (trimmed_mean/median/krum/multi_krum) for free
+        global_client = aggregation.aggregate_clients(
+            stacked, importance, jnp.asarray(contrib), wssl_cfg, safe=True)
         clients = [jax.tree.map(jnp.copy, global_client) for _ in range(n)]
         # advance the buffer clock: arrivals leave, admissions enter
         parked = {i: [p[0] - 1, p[1], p[2]] for i, p in parked.items()

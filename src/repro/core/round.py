@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig, WSSLConfig
-from repro.core import wssl
+from repro.core import aggregation, wssl
 from repro.core.protocol import sync_round_bytes
 from repro.models import transformer as tf
 from repro.sim import faults as sim_faults
@@ -183,7 +183,8 @@ def _client_stage_bytes(client_stack: Params, n: int) -> int:
 
 def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
                val_batch: Optional[Dict[str, jax.Array]] = None,
-               scenario: Optional["sim_faults.ScenarioParams"] = None, *,
+               scenario: Optional["sim_faults.ScenarioParams"] = None,
+               agg_p: Optional["aggregation.AggParams"] = None, *,
                model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
                train_cfg: TrainConfig, schedule,
                impl: str = "chunked") -> Tuple[WSSLState, RoundMetrics]:
@@ -201,23 +202,36 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
     so one compiled executable serves every same-shape scenario.  The fault
     rngs are fold_in-derived, leaving the selection stream and the carried
     state rng untouched — the all-zero (clean) params reproduce the
-    fault-free round bit-for-bit."""
+    fault-free round bit-for-bit.
+
+    agg_p: optional dynamic AggParams (core/aggregation.py) so one
+    executable serves every same-shape trim/f/m setting; None lowers them
+    from the (static) config."""
     n = wssl_cfg.num_clients
     remat = train_cfg.remat
     num_edges = len(state.edge_stages)
     rng, rng_sel = jax.random.split(state.rng)
 
-    # ---- Algorithm 1: selection (round 0 selects everyone — the rule
-    # lives in wssl.participation_mask) --------------------------------
-    mask = wssl.participation_mask(rng_sel, state.importance, wssl_cfg,
-                                   state.round_index)
-
-    # ---- fault injection (repro.sim): dropout ⇒ zero-mask ---------------
+    # ---- fault injection (repro.sim): sampled first so the latency
+    # signal can reach the selection draw; the fold_in stream keeps the
+    # Gumbel draw untouched -----------------------------------------------
     plan = None
     if scenario is not None:
         plan = sim_faults.sample_fault_plan(
             jax.random.fold_in(rng_sel, 0x0DD), scenario, n,
             num_hops=num_edges, hop_replicas=wssl_cfg.hop_replicas)
+
+    # ---- Algorithm 1: selection (round 0 selects everyone — the rule
+    # lives in wssl.participation_mask).  With select_staleness_beta > 0
+    # slow clients pay a latency penalty at the draw itself. -------------
+    penalty = None
+    if wssl_cfg.select_staleness_beta and plan is not None:
+        penalty = sim_faults.client_latencies(plan, n) - 1.0
+    mask = wssl.participation_mask(rng_sel, state.importance, wssl_cfg,
+                                   state.round_index, penalty=penalty)
+
+    # dropout ⇒ zero-mask (dropped clients compose like unselected ones)
+    if plan is not None:
         mask = mask * plan.keep
 
     agg_w = wssl.aggregation_weights(state.importance, mask, wssl_cfg)
@@ -318,6 +332,12 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
         # inert under Adam)
         new_cstack = sim_faults.scale_client_updates(plan, new_cstack,
                                                      state.client_stack)
+        # adaptive adversaries craft their sent stage from the round's
+        # honest updates (mean − z·std) — inside the honest spread, so
+        # importance down-weighting cannot catch them
+        new_cstack = sim_faults.adaptive_scale_updates(plan, new_cstack,
+                                                       state.client_stack,
+                                                       mask)
         # an all-dropped round must leave the shared stages untouched too:
         # with no participants the CE term is zero but the aux term and
         # weight decay would still step (and decay) them every empty round
@@ -353,10 +373,11 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
         val_losses = jnp.zeros((n,), jnp.float32)
         importance = state.importance
 
-    # ---- Algorithm 2 step 5: weighted aggregation + sync ----------------
+    # ---- Algorithm 2 step 5: registry-dispatched aggregation + sync -----
     # (dropout can empty the selection; `safe` falls back to a no-op sync)
-    global_client = wssl.aggregate_clients(new_cstack, importance, mask,
-                                           wssl_cfg, safe=plan is not None)
+    global_client = aggregation.aggregate_clients(
+        new_cstack, importance, mask, wssl_cfg, safe=plan is not None,
+        params=agg_p)
     new_cstack = wssl.broadcast_global(new_cstack, global_client)
 
     # ---- communication accounting --------------------------------------

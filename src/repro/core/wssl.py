@@ -1,5 +1,8 @@
 """WSSL Algorithm 1: importance-based client selection + weighted sampling,
-and the Algorithm 2 global weighted aggregation.
+and the Algorithm 2 aggregation *coefficients*.  The parameter aggregation
+itself (importance/uniform mean, trimmed mean, median, krum, multi-krum)
+is the pluggable registry in ``core/aggregation.py``; this module keeps
+the legacy ``trimmed_mean_average`` / ``aggregate_clients`` aliases.
 
 Everything is jit-safe (static shapes): "selecting" k of N clients yields a
 boolean participation mask over the fixed client axis, and weighted sampling
@@ -52,10 +55,19 @@ def normalize_weights(beta: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def weighted_sample(rng: jax.Array, weights: jax.Array, k: int) -> jax.Array:
-    """Sample k distinct client indices ∝ weights (Gumbel top-k)."""
+def weighted_sample(rng: jax.Array, weights: jax.Array, k: int,
+                    penalty: Optional[jax.Array] = None,
+                    beta: float = 0.0) -> jax.Array:
+    """Sample k distinct client indices ∝ weights (Gumbel top-k).
+
+    ``penalty`` (with a static ``beta > 0``) folds a staleness/latency
+    cost into the top-k logits — busy or slow clients are deprioritized
+    *at the draw* instead of masked after it.  The default ``beta = 0``
+    is a static branch, so the plain draw is untouched bit-for-bit."""
     g = jax.random.gumbel(rng, weights.shape)
     keys = jnp.log(jnp.maximum(weights, 1e-12)) + g
+    if penalty is not None and beta:
+        keys = keys - beta * penalty
     _, idx = jax.lax.top_k(keys, k)
     return idx
 
@@ -66,27 +78,34 @@ def selection_mask(idx: jax.Array, num_clients: int) -> jax.Array:
 
 
 def participation_mask(rng: jax.Array, weights: jax.Array, cfg: WSSLConfig,
-                       round_index, idx: Optional[jax.Array] = None
-                       ) -> jax.Array:
+                       round_index, idx: Optional[jax.Array] = None,
+                       penalty: Optional[jax.Array] = None) -> jax.Array:
     """Algorithm 1's per-round participation as a (N,) mask.
 
     The single home of the "round 0 selects everyone" rule (line 4), jit-safe:
     ``round_index`` may be a traced scalar — the rule is applied under
     ``jnp.where``, so the fused round and the host-side loop share it.
     ``idx`` lets a caller that already drew the Gumbel-top-k sample reuse
-    it instead of re-sampling."""
+    it instead of re-sampling.  ``penalty`` is the staleness-aware
+    selection cost, weighted by ``cfg.select_staleness_beta`` (0 = off)."""
     if idx is None:
-        idx = weighted_sample(rng, weights, cfg.num_selected())
+        idx = weighted_sample(rng, weights, cfg.num_selected(),
+                              penalty=penalty,
+                              beta=cfg.select_staleness_beta)
     mask = selection_mask(idx, cfg.num_clients)
     return jnp.where(round_index == 0, jnp.ones_like(mask), mask)
 
 
 def select_clients(rng: jax.Array, weights: jax.Array, cfg: WSSLConfig,
-                   round_index: int = 1) -> Tuple[jax.Array, jax.Array]:
+                   round_index: int = 1,
+                   penalty: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
     """Full Algorithm 1 for one epoch (host-side view with concrete
     indices); the round-0 rule lives in :func:`participation_mask`."""
     n = cfg.num_clients
-    sampled = weighted_sample(rng, weights, cfg.num_selected())
+    sampled = weighted_sample(rng, weights, cfg.num_selected(),
+                              penalty=penalty,
+                              beta=cfg.select_staleness_beta)
     mask = participation_mask(rng, weights, cfg, round_index, idx=sampled)
     if round_index == 0:
         return jnp.arange(n, dtype=jnp.int32), mask
@@ -98,18 +117,43 @@ def select_clients(rng: jax.Array, weights: jax.Array, cfg: WSSLConfig,
 # ---------------------------------------------------------------------------
 
 
+def mean_coefficients(weights: jax.Array, mask: jax.Array, *,
+                      use_importance: bool = True) -> jax.Array:
+    """Normalized per-client mean coefficients over a (possibly
+    fractional) mask — importance-weighted or uniform.  The shared
+    primitive behind :func:`aggregation_weights` and the registry's
+    weighted rules (``core/aggregation.py``)."""
+    w = weights * mask if use_importance else mask
+    return w / jnp.maximum(w.sum(), 1e-12)
+
+
+def safe_mean_coefficients(weights: jax.Array, mask: jax.Array, *,
+                           use_importance: bool = True) -> jax.Array:
+    """:func:`mean_coefficients` with the empty-mask fallback (see
+    :func:`safe_aggregation_weights`)."""
+    w = mean_coefficients(weights, mask, use_importance=use_importance)
+    full = mean_coefficients(weights, jnp.ones_like(mask),
+                             use_importance=use_importance)
+    return jnp.where(mask.sum() > 0, w, full)
+
+
+def _rule_uses_importance(cfg: WSSLConfig) -> bool:
+    # only the paper's rule weighs the mean (and the per-client losses) by
+    # importance; every other rule — uniform and all robust statistics —
+    # treats participants uniformly here
+    return cfg.resolve_aggregation().rule == "importance"
+
+
 def aggregation_weights(weights: jax.Array, mask: jax.Array,
                         cfg: WSSLConfig) -> jax.Array:
     """Per-client aggregation coefficients, restricted to selected clients.
 
-    ``aggregation="trimmed_mean"`` weighs like "uniform" here (these scalar
-    coefficients also weight the per-client losses); the robust parameter
-    aggregation itself is :func:`trimmed_mean_average`."""
-    if cfg.aggregation in ("uniform", "trimmed_mean"):
-        w = mask
-    else:
-        w = weights * mask
-    return w / jnp.maximum(w.sum(), 1e-12)
+    Robust rules (``trimmed_mean``/``median``/``krum``/``multi_krum``)
+    weigh like "uniform" here (these scalar coefficients also weight the
+    per-client losses); the robust parameter aggregation itself lives in
+    ``core/aggregation.py``."""
+    return mean_coefficients(weights, mask,
+                             use_importance=_rule_uses_importance(cfg))
 
 
 def safe_aggregation_weights(weights: jax.Array, mask: jax.Array,
@@ -121,9 +165,8 @@ def safe_aggregation_weights(weights: jax.Array, mask: jax.Array,
     and zero the global stage.  Falling back to importance over *all*
     clients makes the empty round a no-op sync (clients start each round
     synchronized, and unselected clients never update)."""
-    w = aggregation_weights(weights, mask, cfg)
-    full = aggregation_weights(weights, jnp.ones_like(mask), cfg)
-    return jnp.where(mask.sum() > 0, w, full)
+    return safe_mean_coefficients(weights, mask,
+                                  use_importance=_rule_uses_importance(cfg))
 
 
 # ---------------------------------------------------------------------------
@@ -194,61 +237,20 @@ def weighted_average(stacked: Params, coefs: jax.Array, *,
 
 def trimmed_mean_average(stacked: Params, mask: jax.Array,
                          trim_fraction: float = 0.1) -> Params:
-    """Coordinate-wise trimmed mean over the *masked* client axis.
-
-    The classic Byzantine-robust aggregation rule: per parameter coordinate,
-    drop the k lowest and k highest surviving values (k = ⌊trim·s⌋ for s
-    participants, capped so at least one survives) and average the rest.
-    jit-safe with a dynamic mask: dead clients sort to +inf and a rank
-    window [k, s-k) selects the kept values — shapes never change.  With an
-    empty mask it falls back to the trimmed mean over *all* clients (clients
-    start each round synchronized, so that is a no-op sync).
-
-    The mask may be *fractional* (async rounds discount stale arrivals, so
-    a contribution mask like [0.3, 0, 0, 0] is legal): any strictly
-    positive entry counts as a full participant here — the trimmed mean is
-    an unweighted robust statistic, so the discount gates membership only.
-    Without that coarsening, a sub-unit survivor count s < 1 would drive
-    the trim bound ``floor((s-1)/2)`` negative and the rank window would
-    admit a dead client's +inf sentinel, zeroing nothing and infecting the
-    whole global stage with inf."""
-    alive_count = (mask > 0).sum()
-    m = jnp.where(alive_count > 0, (mask > 0).astype(jnp.float32),
-                  jnp.ones_like(mask))
-    s = m.sum()
-    # guard both ends: trim never below 0 and never past the point where
-    # the kept window [k, s-k) would be empty (s=1 ⇒ k=0, even s ⇒ k ≤
-    # s/2 - 1, odd s ⇒ k ≤ (s-1)/2) — floor((s-1)/2) can go negative only
-    # for s < 1, which the binarized mask above rules out
-    k = jnp.clip(jnp.floor(trim_fraction * s), 0.0,
-                 jnp.maximum(jnp.floor((s - 1) / 2), 0.0))
-
-    def one(a):
-        n = a.shape[0]
-        tail = (1,) * (a.ndim - 1)
-        alive = m.reshape((n,) + tail) > 0
-        vals = jnp.where(alive, a.astype(jnp.float32), jnp.inf)
-        srt = jnp.sort(vals, axis=0)
-        rank = jnp.arange(n, dtype=jnp.float32).reshape((n,) + tail)
-        inc = (rank >= k) & (rank < s - k)
-        kept = jnp.where(inc, srt, 0.0)
-        return (kept.sum(axis=0) / jnp.maximum(s - 2.0 * k, 1.0)
-                ).astype(a.dtype)
-
-    return jax.tree.map(one, stacked)
+    """Legacy alias — the implementation moved to the aggregator registry
+    (``core/aggregation.py::trimmed_mean_average``)."""
+    from repro.core import aggregation
+    return aggregation.trimmed_mean_average(stacked, mask, trim_fraction)
 
 
 def aggregate_clients(stacked: Params, importance: jax.Array,
                       mask: jax.Array, cfg: WSSLConfig, *,
                       safe: bool = False) -> Params:
-    """Dispatch Algorithm 2 step 5 on ``cfg.aggregation``: importance/uniform
-    weighted average, or the robust coordinate-wise trimmed mean.  ``safe``
-    selects the empty-mask fallback (fault-injected rounds can drop every
-    selected client)."""
-    if cfg.aggregation == "trimmed_mean":
-        return trimmed_mean_average(stacked, mask, cfg.trim_fraction)
-    fn = safe_aggregation_weights if safe else aggregation_weights
-    return weighted_average(stacked, fn(importance, mask, cfg))
+    """Legacy alias — Algorithm 2 step 5 now dispatches through the
+    aggregator registry (``core/aggregation.py::aggregate_clients``)."""
+    from repro.core import aggregation
+    return aggregation.aggregate_clients(stacked, importance, mask, cfg,
+                                         safe=safe)
 
 
 def broadcast_global(stacked: Params, global_params: Params) -> Params:

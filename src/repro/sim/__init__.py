@@ -2,12 +2,14 @@
 
 * faults.py   — jit-safe ScenarioParams / FaultPlan + mask/transform ops
                 that compose with the Gumbel-top-k selection mask,
-                including Byzantine (sign-flip / scaled-update) attacks,
-                per-hop faults for multi-hop pipelines, and the simulated
+                including Byzantine (sign-flip / scaled-update) and
+                adaptive (ALIE-style importance-evasion) attacks, per-hop
+                faults for multi-hop pipelines, and the simulated
                 client-latency clock for bounded-staleness async rounds.
 * registry.py — named presets (clean, dropout-30, stragglers,
                 label-flip-adversary, grad-noise-adversary,
                 sign-flip-adversary, scaled-grad-adversary,
+                adaptive-scaled, adaptive-scaled-aggressive,
                 noniid-dirichlet, edge-dropout, edge-latency,
                 async-stragglers, async-byzantine).
 
@@ -16,9 +18,10 @@ partition hook in ``repro.data.partition.partition_for_scenario``.
 """
 
 from repro.sim.faults import (FaultPlan, ScenarioParams,  # noqa: F401
-                              add_gradient_noise, apply_sign_flip,
-                              client_latencies, corrupt_client_grads,
-                              corrupt_labels, label_shift, sample_fault_plan,
+                              adaptive_scale_updates, add_gradient_noise,
+                              apply_sign_flip, client_latencies,
+                              corrupt_client_grads, corrupt_labels,
+                              label_shift, sample_fault_plan,
                               scale_client_updates, scenario_params)
 from repro.sim.registry import (SCENARIOS, get_scenario,  # noqa: F401
                                 list_scenarios, register_scenario)

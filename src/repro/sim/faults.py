@@ -20,6 +20,10 @@ compose with the Gumbel-top-k selection mask:
 * ``sign_flip``   — Byzantine clients send the negated gradient.
 * ``byz_scale``   — Byzantine amplification of the sent update (model
                     poisoning; composed into ``scale_client_updates``).
+* ``adaptive``    — ALIE-style adaptive adversaries send
+                    mean(honest) − z·std(honest), inside the honest spread
+                    so importance down-weighting cannot catch them
+                    (``adaptive_scale_updates``).
 
 Multi-hop pipelines add per-hop faults: each edge-hop replica can die for a
 round (masking exactly the clients routed through it — composed into
@@ -55,6 +59,8 @@ class ScenarioParams(NamedTuple):
     sign_flip_fraction: jax.Array
     grad_scale_fraction: jax.Array
     grad_scale_factor: jax.Array
+    adaptive_fraction: jax.Array
+    adaptive_margin: jax.Array
     hop_dropout_prob: jax.Array
     hop_latency_prob: jax.Array
     hop_latency_slowdown: jax.Array
@@ -69,6 +75,7 @@ class FaultPlan(NamedTuple):
     noise_scale: jax.Array   # (N,) gradient-noise sigma (0.0 = none)
     sign_flip: jax.Array     # (N,) 1.0 = client-stage gradient sign-flipped
     byz_scale: jax.Array     # (N,) Byzantine gradient scale (1.0 = none)
+    adaptive: jax.Array      # (N,) ALIE evasion margin z (0.0 = honest)
 
 
 def scenario_params(sc: Scenario) -> ScenarioParams:
@@ -84,6 +91,8 @@ def scenario_params(sc: Scenario) -> ScenarioParams:
         sign_flip_fraction=f(sc.sign_flip_fraction),
         grad_scale_fraction=f(sc.grad_scale_fraction),
         grad_scale_factor=f(sc.grad_scale_factor),
+        adaptive_fraction=f(sc.adaptive_fraction),
+        adaptive_margin=f(sc.adaptive_margin),
         hop_dropout_prob=f(sc.hop_dropout_prob),
         hop_latency_prob=f(sc.hop_latency_prob),
         hop_latency_slowdown=f(sc.hop_latency_slowdown),
@@ -110,6 +119,7 @@ def sample_fault_plan(rng: jax.Array, sp: ScenarioParams, num_clients: int,
     noisy = (ids + 1.0 <= sp.gradient_noise_fraction * n + 1e-6)
     sflip = (ids + 1.0 <= sp.sign_flip_fraction * n + 1e-6)
     scaled = (ids + 1.0 <= sp.grad_scale_fraction * n + 1e-6)
+    adaptive = (ids + 1.0 <= sp.adaptive_fraction * n + 1e-6)
     n_strag = jnp.floor(sp.straggler_fraction * n + 1e-6)
     strag = ids >= n - n_strag
     dropped = jax.random.bernoulli(rng, sp.dropout_prob, (n,))
@@ -136,6 +146,7 @@ def sample_fault_plan(rng: jax.Array, sp: ScenarioParams, num_clients: int,
         noise_scale=noisy.astype(jnp.float32) * sp.gradient_noise_scale,
         sign_flip=sflip.astype(jnp.float32),
         byz_scale=jnp.where(scaled, sp.grad_scale_factor, 1.0),
+        adaptive=adaptive.astype(jnp.float32) * sp.adaptive_margin,
     )
 
 
@@ -231,5 +242,44 @@ def scale_client_updates(plan: FaultPlan, new_params: Params,
                   + sc * (new.astype(jnp.float32) - old.astype(jnp.float32))
                   ).astype(new.dtype)
         return jnp.where(m, scaled, new)
+
+    return jax.tree.map(one, new_params, old_params)
+
+
+def adaptive_scale_updates(plan: FaultPlan, new_params: Params,
+                           old_params: Params, mask: jax.Array) -> Params:
+    """Adaptive Byzantine attack crafted to evade importance down-weighting
+    ("a little is enough" style, Baruch et al.).
+
+    Instead of a detectable blow-up (``scaled_gradient``), each adaptive
+    client observes the round's *honest* updates and sends
+
+        Δ_sent = mean(Δ_honest) − z · std(Δ_honest)      (per coordinate)
+
+    — a update scaled toward the weighted mean, offset just under the
+    detection margin ``z`` (``Scenario.adaptive_margin``, carried in
+    ``plan.adaptive``).  Because the sent stage sits inside the honest
+    spread, its validation loss tracks the pack and importance weighting
+    never down-weights it; the systematic −z·σ bias still drags the
+    weighted mean off the descent direction every round.  Distance-based
+    rules (krum / multi-krum at z ≳ √2, coordinate-wise median / trimmed
+    mean for minority cohorts) discard or out-vote it.
+
+    Applied to the post-optimizer update like the other Byzantine scalings;
+    honest statistics run over ``mask``-participating, non-adaptive
+    clients.  Exact bit-for-bit identity when no client is adaptive
+    (``jnp.where`` on an all-false mask)."""
+    is_adaptive = (plan.adaptive > 0).astype(jnp.float32)
+    honest = mask * plan.keep * (1.0 - is_adaptive)
+    denom = jnp.maximum(honest.sum(), 1.0)
+
+    def one(new, old):
+        delta = new.astype(jnp.float32) - old.astype(jnp.float32)
+        h = _per_client(honest, delta)
+        mu = (h * delta).sum(axis=0) / denom
+        var = (h * (delta - mu) ** 2).sum(axis=0) / denom
+        crafted_delta = mu - _per_client(plan.adaptive, delta) * jnp.sqrt(var)
+        crafted = (old.astype(jnp.float32) + crafted_delta).astype(new.dtype)
+        return jnp.where(_per_client(is_adaptive, new) > 0, crafted, new)
 
     return jax.tree.map(one, new_params, old_params)

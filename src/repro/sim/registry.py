@@ -38,6 +38,24 @@ register_scenario(Scenario(name="sign-flip-adversary",
 register_scenario(Scenario(name="scaled-grad-adversary",
                            grad_scale_fraction=0.25,
                            grad_scale_factor=32.0))
+# the model-poisoning variant that actually breaks the importance-weighted
+# mean: a non-IID adversary amplifying 64× drags the global toward its own
+# skewed distribution (an amplified *honest* update on shared data is just
+# a bigger step and can even help at small scale) — krum/median discard it
+# (benchmarks/robustness.py --aggregator all)
+register_scenario(Scenario(name="scaled-grad-noniid",
+                           grad_scale_fraction=0.25,
+                           grad_scale_factor=64.0, skew_alpha=0.5))
+# adaptive adversaries (ALIE-style) send mean(honest) − z·std(honest):
+# inside the honest spread, so validation-loss importance never
+# down-weights them — only geometry-aware aggregators (krum/median) help.
+# skew_alpha gives every client its own data stream; with identical client
+# data the honest updates coincide (σ = 0) and the attack is inert.
+register_scenario(Scenario(name="adaptive-scaled", adaptive_fraction=0.25,
+                           adaptive_margin=1.5, skew_alpha=0.5))
+register_scenario(Scenario(name="adaptive-scaled-aggressive",
+                           adaptive_fraction=0.25, adaptive_margin=3.0,
+                           skew_alpha=0.5))
 register_scenario(Scenario(name="noniid-dirichlet", skew_alpha=0.1))
 # multi-hop faults: no-ops on single-cut pipelines (num_hops == 0)
 register_scenario(Scenario(name="edge-dropout", hop_dropout_prob=0.3))

@@ -1,0 +1,512 @@
+"""The pluggable robust-aggregation registry (core/aggregation.py):
+dispatch equivalence with the legacy code paths, median/krum/multi-krum
+edge cases (all-but-one masked, ties, f >= s-2 clamping), dynamic-scalar
+jit discipline, the adaptive (ALIE) attack transform, and staleness-aware
+selection."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro.config import AggregationConfig, Scenario, WSSLConfig
+from repro.core import aggregation, wssl
+from repro.core.aggregation import (AggParams, agg_params, aggregate_clients,
+                                    get_aggregator, krum_average, krum_scores,
+                                    list_aggregators, median_average,
+                                    multi_krum_average, register_aggregator,
+                                    trimmed_mean_average)
+from repro.sim import faults as sim_faults
+
+
+def _stack(seed=0, n=6, shape=(4, 3)):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(n,) + shape), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# registry API
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_builtin_rules():
+    assert set(list_aggregators()) >= {"importance", "uniform",
+                                       "trimmed_mean", "median", "krum",
+                                       "multi_krum"}
+    assert get_aggregator("importance").weighted
+    assert get_aggregator("uniform").weighted
+    for rule in ("trimmed_mean", "median", "krum", "multi_krum"):
+        assert not get_aggregator(rule).weighted, rule
+
+
+def test_unknown_aggregator_raises():
+    with pytest.raises(KeyError):
+        get_aggregator("nope")
+    with pytest.raises(ValueError):
+        AggregationConfig(rule="nope")
+
+
+def test_user_registered_rule_dispatches():
+    """A user rule registers, validates in the config block, and receives
+    the dispatch with the uniform signature."""
+    seen = {}
+
+    @register_aggregator("first_client_test")
+    def first_client(stacked, importance, mask, params, *, safe=False,
+                     use_kernel=False):
+        seen["called"] = True
+        return jax.tree.map(lambda a: a[0], stacked)
+
+    try:
+        cfg = WSSLConfig(num_clients=6,
+                         agg=AggregationConfig(rule="first_client_test"))
+        stacked = _stack()
+        out = aggregate_clients(stacked, jnp.full((6,), 1 / 6),
+                                jnp.ones((6,)), cfg)
+        assert seen["called"]
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(stacked["w"][0]))
+    finally:
+        aggregation._AGGREGATORS.pop("first_client_test", None)
+
+
+def test_config_block_and_legacy_delegation():
+    """The legacy aggregation/trim_fraction strings delegate into the
+    block; an explicit block wins over them."""
+    legacy = WSSLConfig(aggregation="trimmed_mean", trim_fraction=0.3)
+    acfg = legacy.resolve_aggregation()
+    assert acfg.rule == "trimmed_mean" and acfg.trim_fraction == 0.3
+    block = WSSLConfig(aggregation="uniform",
+                       agg=AggregationConfig(rule="krum", byzantine_f=2))
+    assert block.resolve_aggregation().rule == "krum"
+    assert block.resolve_aggregation().byzantine_f == 2
+    with pytest.raises(ValueError):
+        AggregationConfig(trim_fraction=0.9)
+    with pytest.raises(ValueError):
+        AggregationConfig(byzantine_f=-1)
+    with pytest.raises(ValueError):
+        AggregationConfig(multi_krum_m=0)
+
+
+# ---------------------------------------------------------------------------
+# dispatch ≡ legacy code paths, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", ["importance", "uniform"])
+@pytest.mark.parametrize("safe", [False, True])
+def test_weighted_rules_bit_for_bit_vs_legacy(rule, safe):
+    stacked = _stack(1)
+    imp = jnp.asarray([0.3, 0.2, 0.2, 0.1, 0.1, 0.1])
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 0.0])
+    cfg = WSSLConfig(num_clients=6, aggregation=rule)
+    got = aggregate_clients(stacked, imp, mask, cfg, safe=safe)
+    coef_fn = (wssl.safe_aggregation_weights if safe
+               else wssl.aggregation_weights)
+    want = wssl.weighted_average(stacked, coef_fn(imp, mask, cfg))
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_weighted_rules_kernel_path_parity():
+    """use_kernel=True routes the weighted mean through the kernels/wavg
+    Pallas path (interpret mode on CPU) — numerically identical to the
+    reference reduction."""
+    stacked = _stack(3)
+    imp = jnp.asarray([0.3, 0.2, 0.2, 0.1, 0.1, 0.1])
+    mask = jnp.asarray([1.0, 1.0, 0.0, 1.0, 0.0, 1.0])
+    cfg = WSSLConfig(num_clients=6)
+    got = aggregate_clients(stacked, imp, mask, cfg, use_kernel=True)
+    want = aggregate_clients(stacked, imp, mask, cfg, use_kernel=False)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_trimmed_mean_dispatch_bit_for_bit_vs_legacy():
+    stacked = _stack(2)
+    mask = jnp.asarray([1.0, 1.0, 1.0, 1.0, 0.0, 0.0])
+    cfg = WSSLConfig(num_clients=6, aggregation="trimmed_mean",
+                     trim_fraction=0.25)
+    got = aggregate_clients(stacked, jnp.full((6,), 1 / 6), mask, cfg)
+    want = wssl.trimmed_mean_average(stacked, mask, 0.25)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# coordinate-wise median
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [3, 4, 5, 6])
+def test_median_matches_numpy(n):
+    rng = np.random.default_rng(n)
+    a = rng.normal(size=(n, 7)).astype(np.float32)
+    out = median_average({"w": jnp.asarray(a)}, jnp.ones((n,)))
+    np.testing.assert_allclose(np.asarray(out["w"]), np.median(a, axis=0),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_median_respects_mask_and_empty_fallback():
+    a = np.stack([np.full((3,), v, np.float32)
+                  for v in (1.0, 2.0, 7.0, 1e9)])
+    stacked = {"w": jnp.asarray(a)}
+    out = median_average(stacked, jnp.asarray([1.0, 1.0, 1.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.0, rtol=1e-6)
+    # empty mask → median over ALL clients (no-op sync semantics)
+    empty = median_average(stacked, jnp.zeros((4,)))
+    np.testing.assert_allclose(np.asarray(empty["w"]),
+                               np.median(a, axis=0), rtol=1e-6)
+    # all-but-one masked → exactly the survivor, bit for bit
+    one = median_average(stacked, jnp.asarray([0.0, 0.0, 1.0, 0.0]))
+    np.testing.assert_array_equal(np.asarray(one["w"]), a[2])
+
+
+def test_median_ties_and_fractional_mask():
+    """Duplicate values are fine (sort is total), and fractional
+    staleness-discounted masks gate membership only."""
+    a = np.asarray([[1.0], [1.0], [1.0], [5.0]], np.float32)
+    out = median_average({"w": jnp.asarray(a)}, jnp.ones((4,)))
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0, rtol=1e-6)
+    frac = median_average({"w": jnp.asarray(a)},
+                          jnp.asarray([0.4, 0.0, 0.2, 0.0]))
+    np.testing.assert_allclose(np.asarray(frac["w"]), 1.0, rtol=1e-6)
+
+
+def test_median_one_trace_across_masks():
+    stacked = {"w": jnp.asarray(np.random.default_rng(3).normal(
+        size=(5, 6)), jnp.float32)}
+    fn = jax.jit(lambda s, m: median_average(s, m))
+    for m in ([1, 1, 1, 1, 1], [1, 0, 1, 0, 0], [0, 0, 0, 0, 0]):
+        fn(stacked, jnp.asarray(m, jnp.float32))
+    assert fn._cache_size() == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 10), seed=st.integers(0, 1000))
+def test_median_and_trimmed_mean_within_alive_range(n, seed):
+    """Both robust statistics stay inside [min, max] of the surviving
+    clients per coordinate, for any nonempty mask."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, 4)).astype(np.float32)
+    m = rng.integers(0, 2, size=n).astype(np.float32)
+    m[rng.integers(0, n)] = 1.0
+    alive = a[m > 0]
+    for out in (median_average({"w": jnp.asarray(a)}, jnp.asarray(m)),
+                trimmed_mean_average({"w": jnp.asarray(a)},
+                                     jnp.asarray(m), 0.2)):
+        o = np.asarray(out["w"])
+        assert (o <= alive.max(0) + 1e-5).all()
+        assert (o >= alive.min(0) - 1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# krum / multi-krum
+# ---------------------------------------------------------------------------
+
+
+def test_krum_discards_byzantine_outlier():
+    """One poisoned stage must never be selected, whatever its magnitude —
+    where the importance mean is dragged arbitrarily far."""
+    base = np.tile(np.arange(4, dtype=np.float32), (6, 1))
+    base += np.random.default_rng(0).normal(scale=0.01, size=base.shape
+                                            ).astype(np.float32)
+    base[0] = 1e6
+    stacked = {"w": jnp.asarray(base)}
+    out = krum_average(stacked, jnp.ones((6,)), 1)
+    assert float(np.abs(np.asarray(out["w"])).max()) < 10.0
+    scores = np.asarray(krum_scores(stacked, jnp.ones((6,)), 1))
+    assert np.argmax(scores) == 0          # the outlier scores worst
+
+
+def test_krum_returns_exactly_one_client_stage():
+    stacked = _stack(4)
+    out = krum_average(stacked, jnp.ones((6,)), 1)
+    matches = [
+        i for i in range(6)
+        if all(np.array_equal(np.asarray(l)[i], np.asarray(o))
+               for l, o in zip(jax.tree.leaves(stacked),
+                               jax.tree.leaves(out)))]
+    assert len(matches) == 1
+
+
+def test_krum_ties_break_to_lowest_index():
+    """Identical clients tie on score; argmin must pick the lowest index
+    deterministically."""
+    a = np.ones((4, 3), np.float32)
+    a[3] = 100.0
+    scores = np.asarray(krum_scores({"w": jnp.asarray(a)},
+                                    jnp.ones((4,)), 0))
+    assert scores[0] == scores[1] == scores[2]
+    i_star = int(jnp.argmin(jnp.asarray(scores)))
+    assert i_star == 0
+
+
+def test_krum_respects_mask_and_single_survivor():
+    a = np.stack([np.full((3,), v, np.float32)
+                  for v in (1.0, 1.1, 0.9, 1e9)])
+    stacked = {"w": jnp.asarray(a)}
+    # the masked-out poisoned client can never be chosen
+    out = krum_average(stacked, jnp.asarray([1.0, 1.0, 1.0, 0.0]), 0)
+    assert float(np.abs(np.asarray(out["w"])).max()) < 10.0
+    # all-but-one masked: the lone survivor wins even though it has no
+    # finite neighbour (score 0 vs +inf for the dead)
+    out = krum_average(stacked, jnp.asarray([0.0, 0.0, 0.0, 1.0]), 2)
+    np.testing.assert_array_equal(np.asarray(out["w"]), a[3])
+
+
+@pytest.mark.parametrize("f", [2, 3, 10])
+def test_krum_f_at_least_s_minus_2_clamps(f):
+    """f >= s-2 would make the neighbour count s-f-2 <= 0; the clamp
+    degrades to nearest-neighbour scoring and still picks a clean
+    client."""
+    base = np.tile(np.linspace(0, 1, 5, dtype=np.float32), (4, 1))
+    base[0] += 1e4
+    out = krum_average({"w": jnp.asarray(base)}, jnp.ones((4,)), f)
+    assert float(np.abs(np.asarray(out["w"])).max()) < 10.0
+
+
+def test_krum_dynamic_f_one_executable():
+    """byzantine_f is a dynamic scalar: every f shares one trace."""
+    stacked = _stack(5)
+    fn = jax.jit(lambda s, m, f: krum_average(s, m, f))
+    mask = jnp.ones((6,))
+    for f in (0.0, 1.0, 3.0, 7.0):
+        fn(stacked, mask, jnp.asarray(f, jnp.float32))
+    assert fn._cache_size() == 1
+
+
+def test_multi_krum_full_m_is_uniform_mean():
+    """m = s averages every survivor — the uniform masked mean."""
+    stacked = _stack(6)
+    mask = jnp.asarray([1.0, 1.0, 0.0, 1.0, 1.0, 0.0])
+    out = multi_krum_average(stacked, mask, 0, 4.0)
+    want = wssl.weighted_average(stacked, mask / mask.sum())
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_multi_krum_excludes_outlier_with_default_m():
+    """Default m = s - f drops exactly the f worst-scored clients."""
+    base = np.tile(np.arange(3, dtype=np.float32), (5, 1))
+    base += np.random.default_rng(1).normal(scale=0.01, size=base.shape
+                                            ).astype(np.float32)
+    base[0] = 5e5
+    out = multi_krum_average({"w": jnp.asarray(base)}, jnp.ones((5,)), 1,
+                             0.0)
+    assert float(np.abs(np.asarray(out["w"])).max()) < 10.0
+    # m clamped to s: asking for more candidates than survivors is safe
+    out = multi_krum_average({"w": jnp.asarray(base)},
+                             jnp.asarray([0.0, 1.0, 1.0, 0.0, 0.0]), 0,
+                             50.0)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(base[1:3]).mean(0), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 9), seed=st.integers(0, 500),
+       f=st.integers(0, 8))
+def test_krum_always_selects_a_surviving_client(n, seed, f):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, 5)).astype(np.float32)
+    m = rng.integers(0, 2, size=n).astype(np.float32)
+    m[rng.integers(0, n)] = 1.0
+    out = np.asarray(krum_average({"w": jnp.asarray(a)}, jnp.asarray(m),
+                                  f)["w"])
+    assert any(np.array_equal(out, a[i]) for i in range(n) if m[i] > 0)
+
+
+# ---------------------------------------------------------------------------
+# dynamic AggParams through the dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_agg_params_lowering_and_dynamic_dispatch():
+    acfg = AggregationConfig(rule="multi_krum", byzantine_f=2,
+                             multi_krum_m=3)
+    p = agg_params(acfg)
+    assert float(p.byzantine_f) == 2.0 and float(p.multi_krum_m) == 3.0
+    assert float(agg_params(AggregationConfig()).multi_krum_m) == 0.0
+
+    cfg = WSSLConfig(num_clients=6, agg=AggregationConfig(rule="krum"))
+    stacked = _stack(7)
+    fn = jax.jit(lambda s, imp, m, p: aggregate_clients(
+        s, imp, m, cfg, params=p))
+    imp, mask = jnp.full((6,), 1 / 6), jnp.ones((6,))
+    for f in (0.0, 1.0, 2.0):
+        fn(stacked, imp, mask, AggParams(
+            trim_fraction=jnp.asarray(0.1, jnp.float32),
+            byzantine_f=jnp.asarray(f, jnp.float32),
+            multi_krum_m=jnp.asarray(0.0, jnp.float32)))
+    assert fn._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# the adaptive (ALIE) attack transform
+# ---------------------------------------------------------------------------
+
+
+def _plan(n, adaptive, margin=1.5, keep=None):
+    z = jnp.asarray(adaptive, jnp.float32) * margin
+    return sim_faults.FaultPlan(
+        keep=jnp.ones((n,)) if keep is None else jnp.asarray(keep),
+        flip=jnp.zeros((n,)), grad_scale=jnp.ones((n,)),
+        noise_scale=jnp.zeros((n,)), sign_flip=jnp.zeros((n,)),
+        byz_scale=jnp.ones((n,)), adaptive=z)
+
+
+def test_adaptive_attack_sends_mean_minus_margin_std():
+    rng = np.random.default_rng(0)
+    old = {"w": jnp.zeros((4, 6), jnp.float32)}
+    new = {"w": jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)}
+    plan = _plan(4, [1.0, 0.0, 0.0, 0.0], margin=2.0)
+    out = sim_faults.adaptive_scale_updates(plan, new, old, jnp.ones((4,)))
+    honest = np.asarray(new["w"])[1:]
+    want = honest.mean(0) - 2.0 * honest.std(0)
+    np.testing.assert_allclose(np.asarray(out["w"][0]), want, rtol=1e-5,
+                               atol=1e-6)
+    # honest clients' updates pass through untouched, bit for bit
+    np.testing.assert_array_equal(np.asarray(out["w"][1:]),
+                                  np.asarray(new["w"][1:]))
+
+
+def test_adaptive_attack_clean_plan_is_identity():
+    rng = np.random.default_rng(1)
+    old = {"w": jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)}
+    new = {"w": jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)}
+    out = sim_faults.adaptive_scale_updates(
+        _plan(4, [0.0] * 4), new, old, jnp.ones((4,)))
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(new["w"]))
+
+
+def test_adaptive_attack_stays_inside_honest_spread_but_biases_mean():
+    """The crafted update deviates from the honest mean by exactly z per
+    coordinate (in std units) — under the usual 3σ detection margin for
+    z ≤ 3 — yet shifts the uniform mean by z·σ/N."""
+    rng = np.random.default_rng(2)
+    old = {"w": jnp.zeros((5, 8), jnp.float32)}
+    new = {"w": jnp.asarray(rng.normal(size=(5, 8)), jnp.float32)}
+    z = 1.5
+    out = sim_faults.adaptive_scale_updates(
+        _plan(5, [1.0, 0.0, 0.0, 0.0, 0.0], margin=z), new, old,
+        jnp.ones((5,)))
+    honest = np.asarray(new["w"])[1:]
+    mu, sd = honest.mean(0), honest.std(0)
+    dev = np.abs(np.asarray(out["w"][0]) - mu) / np.maximum(sd, 1e-9)
+    np.testing.assert_allclose(dev, z, rtol=1e-4)
+    drift = np.asarray(out["w"]).mean(0) - np.asarray(new["w"]).mean(0)
+    assert (np.abs(drift) > 0).any()
+
+
+def test_scenario_adaptive_cohort_and_params():
+    sc = Scenario(name="x", adaptive_fraction=0.5, adaptive_margin=2.5)
+    assert sc.adaptive_ids(4) == [0, 1]
+    assert sc.adversary_ids(4) == [0, 1]
+    assert not sc.is_clean()
+    sp = sim_faults.scenario_params(sc)
+    plan = sim_faults.sample_fault_plan(jax.random.PRNGKey(0), sp, 4)
+    np.testing.assert_allclose(np.asarray(plan.adaptive),
+                               [2.5, 2.5, 0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# robust rules end-to-end through the fused round
+# ---------------------------------------------------------------------------
+
+
+def _tiny_round(rule, **agg_kw):
+    from repro.config import ModelConfig, TrainConfig
+    from repro.core.round import init_state, make_round_fn
+    from repro.data.synthetic import lm_batch
+    model = ModelConfig(name="tiny-agg", num_layers=2, d_model=32,
+                        num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                        dtype="float32", param_dtype="float32")
+    w = WSSLConfig(num_clients=4, participation_fraction=1.0,
+                   agg=AggregationConfig(rule=rule, **agg_kw))
+    t = TrainConfig(remat=False, learning_rate=1e-3, warmup_steps=0,
+                    schedule="constant")
+    state, _ = init_state(jax.random.PRNGKey(0), model, w, t)
+    rf = jax.jit(make_round_fn(model, w, t, impl="dense"))
+    for r in range(2):
+        d = lm_batch(8, 16, model.vocab_size, seed=r)
+        batch = {"tokens": jnp.asarray(d["tokens"]).reshape(4, 2, 16),
+                 "labels": jnp.asarray(d["labels"]).reshape(4, 2, 16)}
+        state, m = rf(state, batch, None)
+    return state, m
+
+
+@pytest.mark.parametrize("rule,kw", [("median", {}),
+                                     ("krum", {"byzantine_f": 1}),
+                                     ("multi_krum", {"byzantine_f": 1})])
+def test_robust_rules_drive_fused_round(rule, kw):
+    state, m = _tiny_round(rule, **kw)
+    leaf = np.asarray(jax.tree.leaves(state.client_stack)[0])
+    assert np.isfinite(leaf).all()
+    for i in range(1, 4):
+        np.testing.assert_allclose(leaf[0], leaf[i], atol=1e-6)
+    assert np.isfinite(float(m.loss))
+
+
+def test_paper_loop_dispatches_robust_rule():
+    """The host-side paper loop routes through the same registry dispatch:
+    a krum run trains (above-chance accuracy) with the robust global."""
+    from repro.configs.wssl_paper import GaitConfig
+    from repro.core.paper_loop import gait_adapter, train_wssl
+    from repro.data.pipeline import ClientLoader
+    from repro.data.synthetic import make_gait_like
+
+    data = make_gait_like(n=1200, seed=0)
+    tr = {k: v[:900] for k, v in data.items()}
+    val = {k: v[900:1050] for k, v in data.items()}
+    test = {k: v[1050:] for k, v in data.items()}
+    parts = np.array_split(np.arange(900), 3)
+    loaders = [ClientLoader({"x": tr["x"], "y": tr["y"]}, p, 64, seed=i)
+               for i, p in enumerate(parts)]
+    h = train_wssl(
+        gait_adapter(GaitConfig()), loaders, val, test,
+        WSSLConfig(num_clients=3, participation_fraction=1.0,
+                   agg=AggregationConfig(rule="krum", byzantine_f=1)),
+        rounds=3, local_steps=6, lr=2e-3)
+    assert np.isfinite(h["test_loss"]).all()
+    assert h["best_acc"] > 0.55
+
+
+# ---------------------------------------------------------------------------
+# staleness-aware selection (select_staleness_beta)
+# ---------------------------------------------------------------------------
+
+
+def test_selection_penalty_off_is_bit_for_bit_noop():
+    w = jnp.full((6,), 1 / 6)
+    pen = jnp.asarray([100.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+    for i in range(10):
+        a = wssl.weighted_sample(jax.random.PRNGKey(i), w, 3)
+        b = wssl.weighted_sample(jax.random.PRNGKey(i), w, 3, penalty=pen,
+                                 beta=0.0)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_selection_penalty_deprioritizes_slow_clients():
+    """With beta > 0 a heavily penalized client loses the draw it would
+    otherwise often win; unpenalized draws stay ∝ weights."""
+    w = jnp.full((4,), 0.25)
+    pen = jnp.asarray([50.0, 0.0, 0.0, 0.0])
+    hits = 0
+    for i in range(60):
+        idx = wssl.weighted_sample(jax.random.PRNGKey(i), w, 2,
+                                   penalty=pen, beta=1.0)
+        hits += int(0 in np.asarray(idx).tolist())
+    assert hits == 0
+    cfg = WSSLConfig(num_clients=4, participation_fraction=0.5,
+                     select_staleness_beta=1.0)
+    mask = wssl.participation_mask(jax.random.PRNGKey(0), w, cfg, 1,
+                                   penalty=pen)
+    assert float(mask[0]) == 0.0
+    # round 0 still selects everyone, penalty or not
+    mask0 = wssl.participation_mask(jax.random.PRNGKey(0), w, cfg, 0,
+                                    penalty=pen)
+    assert float(mask0.sum()) == 4.0

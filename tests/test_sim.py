@@ -148,7 +148,8 @@ def test_corrupt_labels_only_flips_adversaries():
                      grad_scale=jnp.ones((4,)),
                      noise_scale=jnp.zeros((4,)),
                      sign_flip=jnp.zeros((4,)),
-                     byz_scale=jnp.ones((4,)))
+                     byz_scale=jnp.ones((4,)),
+                     adaptive=jnp.zeros((4,)))
     labels = jax.random.randint(jax.random.PRNGKey(0), (4, 2, 8), 0, 64)
     out = corrupt_labels(plan, labels, 64)
     np.testing.assert_array_equal(np.asarray(out[1:]),

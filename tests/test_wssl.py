@@ -144,6 +144,29 @@ def test_aggregation_weights_sum_to_one_under_any_mask(n, seed, agg):
     assert float(coefs.min()) >= 0
 
 
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 1000),
+       agg=st.sampled_from(["importance", "uniform"]),
+       empty=st.booleans())
+def test_safe_aggregation_weights_property(n, seed, agg, empty):
+    """For ANY mask (including the empty one) the safe coefficients are a
+    convex combination; the empty mask falls back to the full-population
+    rule, never to all zeros."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
+    m = np.zeros(n) if empty else rng.integers(0, 2, size=n)
+    mask = jnp.asarray(m, jnp.float32)
+    cfg = WSSLConfig(num_clients=n, aggregation=agg)
+    coefs = wssl.safe_aggregation_weights(w, mask, cfg)
+    assert abs(float(coefs.sum()) - 1.0) < 1e-5
+    assert float(coefs.min()) >= 0
+    if m.sum() == 0:
+        full = wssl.aggregation_weights(w, jnp.ones((n,)), cfg)
+        np.testing.assert_array_equal(np.asarray(coefs), np.asarray(full))
+    else:
+        assert (np.asarray(coefs)[m == 0] == 0).all()
+
+
 def test_safe_aggregation_weights_empty_mask_fallback():
     """An all-dropped round must fall back to importance over all clients
     (a no-op sync), never to all-zero coefficients."""
