@@ -1,33 +1,60 @@
-"""Batched serving with the WSSL global model: prefill a batch of prompts,
-decode continuations, report tokens/s — across three architecture families
-(dense / SSM / hybrid) to show the unified KV/state-cache path.
+"""Batched serving with the WSSL global model, on the scan-fused
+``repro.serve`` engine: prefill a batch of prompts, decode continuations
+in ONE compiled executable per shape, report tokens/s — across three
+architecture families (dense / SSM / hybrid) to show the unified
+KV/state-cache path, then a split-mode (client→edge→server) round trip
+to show serving through the WSSL cut.
 
-  PYTHONPATH=src python examples/serve_batched.py
+  PYTHONPATH=src python examples/serve_batched.py [--smoke]
 """
 
+import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import get_arch, reduced
 from repro.data.synthetic import make_token_stream
-from repro.launch.serve import generate
 from repro.models import transformer as tf
+from repro.serve import get_engine
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller shapes (CI)")
+    args = ap.parse_args()
+    batch, plen, gen = (2, 16, 8) if args.smoke else (4, 32, 16)
+
     for arch in ["gemma3-12b", "mamba2-370m", "recurrentgemma-2b"]:
         cfg = reduced(get_arch(arch))
         params, _ = tf.init_params(jax.random.PRNGKey(0), cfg)
-        prompts = jnp.asarray(make_token_stream(4, 32, cfg.vocab_size, seed=1))
+        prompts = np.asarray(make_token_stream(batch, plen, cfg.vocab_size,
+                                               seed=1))
+        engine = get_engine(cfg, impl="dense")
+        out = engine.generate(params, prompts, gen)   # compile
         t0 = time.time()
-        out = generate(params, cfg, prompts, 16, impl="dense")
+        out = jax.block_until_ready(engine.generate(params, prompts, gen))
         dt = time.time() - t0
-        print(f"{arch:20s} batch=4 prompt=32 gen=16  {dt:5.1f}s "
-              f"({4 * 16 / dt:5.1f} tok/s)  "
+        print(f"{arch:20s} batch={batch} prompt={plen} gen={gen}  "
+              f"{dt * 1e3:7.1f} ms ({batch * gen / dt:7.1f} tok/s, "
+              f"compiles: decode={engine.decode_compiles} "
+              f"prefill={engine.prefill_compiles})  "
               f"first tokens: {np.asarray(out[0, :6]).tolist()}")
+
+    # serving through the split pipeline produces the same tokens while
+    # crossing the client->server hop every decode step
+    cfg = reduced(get_arch("recurrentgemma-2b"))
+    params, _ = tf.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = np.asarray(make_token_stream(batch, plen, cfg.vocab_size,
+                                           seed=1))
+    merged = get_engine(cfg, impl="dense").generate(params, prompts, gen)
+    split_eng = get_engine(cfg, impl="dense", cuts=(cfg.period,))
+    split = split_eng.generate(params, prompts, gen)
+    same = bool((np.asarray(merged) == np.asarray(split)).all())
+    print(f"split-mode ({split_eng.num_stages} stages) == merged: {same}")
+    assert same
 
 
 if __name__ == "__main__":

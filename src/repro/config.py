@@ -300,10 +300,15 @@ class AggregationConfig:
     * ``krum``         — Krum: the single client whose update is closest to
                          its ``s - f - 2`` nearest neighbours
     * ``multi_krum``   — average of the ``m`` lowest-scored Krum candidates
+    * ``geometric_median`` — Weiszfeld geometric median over the flattened
+                         client stages (fixed iteration count, jit-safe)
+    * ``norm_clip``    — importance mean of per-client deviations clipped
+                         to ``clip_factor ×`` the median deviation norm
 
-    ``byzantine_f`` and ``multi_krum_m`` reach the jit'd round as *dynamic*
-    scalars (``aggregation.AggParams``), so one compiled executable serves
-    every same-shape tolerance setting; the rule itself is a static branch.
+    ``byzantine_f``, ``multi_krum_m``, and ``clip_factor`` reach the jit'd
+    round as *dynamic* scalars (``aggregation.AggParams``), so one compiled
+    executable serves every same-shape tolerance setting; the rule itself
+    is a static branch.
     """
 
     rule: str = "importance"
@@ -315,9 +320,12 @@ class AggregationConfig:
     # multi_krum: how many lowest-scored candidates to average; None =
     # s - f (the classic choice), clamped to [1, s]
     multi_krum_m: Optional[int] = None
+    # norm_clip: deviations capped at clip_factor × the median deviation
+    # norm of the surviving clients
+    clip_factor: float = 1.0
 
     _RULES = ("importance", "uniform", "trimmed_mean", "median", "krum",
-              "multi_krum")
+              "multi_krum", "geometric_median", "norm_clip")
 
     def __post_init__(self):
         if self.rule not in self._RULES and not self._registered(self.rule):
@@ -329,6 +337,8 @@ class AggregationConfig:
             raise ValueError("byzantine_f must be >= 0")
         if self.multi_krum_m is not None and self.multi_krum_m < 1:
             raise ValueError("multi_krum_m must be >= 1 (None = s - f)")
+        if self.clip_factor <= 0.0:
+            raise ValueError("clip_factor must be > 0")
 
     @staticmethod
     def _registered(rule: str) -> bool:

@@ -48,6 +48,7 @@ from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import AggregationConfig, WSSLConfig
 from repro.core import wssl
@@ -70,6 +71,9 @@ class AggParams(NamedTuple):
     trim_fraction: jax.Array   # per-tail trim fraction (trimmed_mean)
     byzantine_f: jax.Array     # assumed Byzantine count (krum/multi_krum)
     multi_krum_m: jax.Array    # candidates to average; 0.0 = auto (s - f)
+    # deviation-norm cap multiplier (norm_clip); defaulted so existing
+    # hand-built AggParams (tests, user code) keep constructing
+    clip_factor: jax.Array = 1.0
 
 
 def agg_params(cfg: AggregationConfig) -> AggParams:
@@ -78,7 +82,8 @@ def agg_params(cfg: AggregationConfig) -> AggParams:
     m = 0.0 if cfg.multi_krum_m is None else cfg.multi_krum_m
     return AggParams(trim_fraction=f(cfg.trim_fraction),
                      byzantine_f=f(cfg.byzantine_f),
-                     multi_krum_m=f(m))
+                     multi_krum_m=f(m),
+                     clip_factor=f(cfg.clip_factor))
 
 
 # ---------------------------------------------------------------------------
@@ -266,6 +271,91 @@ def multi_krum_average(stacked: Params, mask: jax.Array, byzantine_f,
     return wssl.weighted_average(stacked, coefs)
 
 
+def geometric_median_average(stacked: Params, mask: jax.Array,
+                             iters: int = 8, eps: float = 1e-8) -> Params:
+    """Geometric median over the masked client axis (Weiszfeld iteration).
+
+    The minimizer of Σᵢ ||xᵢ − z|| over the flattened client-stage vectors
+    — a rotation-invariant robust center with breakdown point 1/2, so any
+    minority cohort of poisoned updates (including coordinated ones that
+    defeat coordinate-wise rules) moves it only boundedly.  A **fixed**
+    number of Weiszfeld iterations keeps the rule jit-safe (no dynamic
+    convergence test; 8 iterations is plenty at these scales):
+
+        z ← Σᵢ wᵢ xᵢ / Σᵢ wᵢ,   wᵢ = mᵢ / max(||xᵢ − z||, ε)
+
+    starting from the masked uniform mean.  The ε floor doubles as the
+    standard Weiszfeld guard against landing exactly on a data point.
+    Dead clients have zero weight at every iteration.  The iteration runs
+    on the flattened ``(N, D)`` client matrix (:func:`_flat_clients`, as
+    krum does) — one flatten, one reconstruction."""
+    m = _membership(mask)
+    flat = _flat_clients(stacked)                        # (N, D) fp32
+    w = m / jnp.maximum(m.sum(), 1.0)
+    z = (w[:, None] * flat).sum(axis=0)                  # (D,)
+    for _ in range(iters):
+        d = jnp.sqrt(jnp.maximum(((flat - z) ** 2).sum(axis=1), 0.0))
+        w = m / jnp.maximum(d, eps)
+        w = w / jnp.maximum(w.sum(), eps)
+        z = (w[:, None] * flat).sum(axis=0)
+
+    leaves, treedef = jax.tree.flatten(stacked)
+    out, offset = [], 0
+    for leaf in leaves:
+        size = int(np.prod(leaf.shape[1:], dtype=np.int64))
+        out.append(z[offset:offset + size].reshape(leaf.shape[1:])
+                   .astype(leaf.dtype))
+        offset += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def norm_clip_average(stacked: Params, importance: jax.Array,
+                      mask: jax.Array, clip_factor=1.0, *,
+                      safe: bool = False, eps: float = 1e-8) -> Params:
+    """Importance-weighted mean with per-client deviation-norm clipping.
+
+    The norm-bounding defense: model poisoning needs *magnitude*, so cap
+    each client's deviation at ``clip_factor ×`` the median surviving
+    deviation norm τ before the importance-weighted mean.  The center μ is
+    the coordinate-wise masked **median** (not the mean — a 50× poisoned
+    client drags the mean so far that clipping deviations from it can't
+    recover):
+
+        Δᵢ = xᵢ − μ,   Δᵢ ← Δᵢ · min(1, c·τ / ||Δᵢ||),   out = μ + Σᵢ γᵢ Δᵢ
+
+    Honest clients (||Δ|| ≈ τ) pass nearly untouched — with no outliers
+    the rule is close to the plain importance mean — while an amplified
+    update keeps only its direction at bounded length.  ``clip_factor`` is
+    a dynamic scalar (one executable per shape); the median norm uses the
+    same +inf-sentinel masked sort as the coordinate-wise rules."""
+    mu = median_average(stacked, mask)
+
+    deltas = jax.tree.map(
+        lambda a, c: a.astype(jnp.float32) - c.astype(jnp.float32),
+        stacked, mu)
+    norms = jnp.sqrt(jnp.maximum(
+        (_flat_clients(deltas) ** 2).sum(axis=1), 0.0))             # (N,)
+
+    # masked median of the surviving norms — the shared sentinel-sort
+    # machinery, applied to the (N,) norm vector as one "coordinate"
+    tau = median_average({"n": norms}, mask)["n"]
+
+    cap = jnp.asarray(clip_factor, jnp.float32) * tau
+    scale = jnp.minimum(1.0, cap / jnp.maximum(norms, eps))          # (N,)
+
+    coef_fn = (wssl.safe_mean_coefficients if safe
+               else wssl.mean_coefficients)
+    coefs = coef_fn(importance, mask, use_importance=True)
+
+    def one(mu_l, d):
+        tail = (1,) * (d.ndim - 1)
+        clipped = d * scale.reshape((-1,) + tail)
+        agg = (coefs.reshape((-1,) + tail) * clipped).sum(axis=0)
+        return (mu_l.astype(jnp.float32) + agg).astype(mu_l.dtype)
+
+    return jax.tree.map(one, mu, deltas)
+
+
 # ---------------------------------------------------------------------------
 # Built-in registry entries (uniform signature)
 # ---------------------------------------------------------------------------
@@ -322,6 +412,22 @@ def _multi_krum_rule(stacked, importance, mask, params, *, safe=False,
                      use_kernel=False):
     return multi_krum_average(stacked, mask, params.byzantine_f,
                               params.multi_krum_m)
+
+
+@register_aggregator("geometric_median",
+                     doc="Weiszfeld geometric median (fixed iterations)")
+def _geometric_median_rule(stacked, importance, mask, params, *, safe=False,
+                           use_kernel=False):
+    return geometric_median_average(stacked, mask)
+
+
+@register_aggregator("norm_clip", weighted=True,
+                     doc="importance mean with deviation norms clipped to "
+                         "clip_factor x the median")
+def _norm_clip_rule(stacked, importance, mask, params, *, safe=False,
+                    use_kernel=False):
+    return norm_clip_average(stacked, importance, mask, params.clip_factor,
+                             safe=safe)
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,20 @@
-"""Batched serving driver: prefill a batch of prompts, then decode tokens
-step by step with the merged WSSL global model (client-global + server).
+"""Serving CLI — a thin shell over the ``repro.serve`` subsystem.
+
+Merged-model batched generation (the classic path, now scan-fused and
+compiled once):
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --reduced \
       --batch 4 --prompt-len 32 --gen 16
+
+Fault-routed continuous batching across replicas, driven by a
+``repro.sim`` scenario (see docs/serving.md):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --reduced \
+      --requests 8 --replicas 2 --scenario replica-drop
+
+``--mode split`` serves through the client→edge→server pipeline stages at
+the WSSL cuts instead of the merged model (identical tokens, per-hop
+activation bytes accounted).
 """
 
 from __future__ import annotations
@@ -11,35 +23,28 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import get_arch, reduced
+from repro.config import WSSLConfig, get_arch, reduced
 from repro.data.synthetic import make_token_stream
 from repro.models import transformer as tf
+from repro.serve import (DecodeEngine, FaultRoutedServer, ServeParams,
+                         get_engine, synthetic_requests)
+from repro.sim import get_scenario
 
 
 def generate(params, cfg, prompts: jax.Array, gen: int, *,
              impl: str = "dense", temperature: float = 0.0,
              rng=None):
-    """Greedy / temperature batched generation."""
-    b, s0 = prompts.shape
-    max_len = s0 + gen
-    logits, cache = tf.prefill(params, cfg, prompts, max_len=max_len,
-                               impl=impl)
-    decode = jax.jit(lambda p, t, c, pos: tf.decode_step(p, cfg, t, c, pos))
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
-    for t in range(gen - 1):
-        logits, cache = decode(params, tok, cache, jnp.asarray(s0 + t))
-        if temperature > 0:
-            rng, sub = jax.random.split(rng)
-            tok = jax.random.categorical(sub, logits[:, 0] / temperature
-                                         )[:, None].astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+    """Greedy / temperature batched generation.
+
+    Backward-compatible entry point; delegates to the process-wide
+    :class:`~repro.serve.DecodeEngine` so repeated calls with the same
+    shapes reuse ONE compiled prefill + one scan-fused decode executable
+    (the legacy version re-jitted a fresh ``decode_step`` per call)."""
+    engine = get_engine(cfg, impl=impl)
+    return engine.generate(params, prompts, gen, temperature=temperature,
+                           rng=rng)
 
 
 def main() -> None:
@@ -51,20 +56,70 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--impl", default="dense")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", choices=["merged", "split"], default="merged")
+    ap.add_argument("--cuts", default=None,
+                    help="comma-separated cut layers for --mode split "
+                         "(default: the WSSL config's resolved cut)")
+    # fault-routed serving (engaged by --requests > 0)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="serve N queued requests through the fault-routed "
+                         "replica router instead of one batched generate")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--scenario", default="clean")
     args = ap.parse_args()
+    if args.cuts and args.mode != "split":
+        ap.error("--cuts only takes effect with --mode split")
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     params, _ = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
-    prompts = jnp.asarray(make_token_stream(args.batch, args.prompt_len,
-                                            cfg.vocab_size, seed=args.seed))
+
+    cuts = None
+    if args.mode == "split":
+        cuts = (tuple(int(c) for c in args.cuts.split(","))
+                if args.cuts else WSSLConfig().resolve_cuts(cfg))
+    engine = DecodeEngine(cfg, impl=args.impl, cuts=cuts)
+
+    if args.requests > 0:
+        sc = get_scenario(args.scenario)
+        sp = ServeParams(replicas=args.replicas, slots=args.slots,
+                         chunk=args.chunk,
+                         max_len=args.prompt_len + args.gen + args.chunk,
+                         seed=args.seed)
+        server = FaultRoutedServer(engine, params, sp, scenario=sc)
+        reqs = synthetic_requests(cfg, args.requests,
+                                  prompt_len=args.prompt_len, gen=args.gen,
+                                  seed=args.seed)
+        t0 = time.time()
+        report = server.run(reqs)
+        dt = time.time() - t0
+        pct = report.percentiles
+        print(f"arch={cfg.name} mode={args.mode} scenario={sc.name} "
+              f"replicas={args.replicas} slots={args.slots}: "
+              f"{report.tokens_out} tokens in {dt:.2f}s wall "
+              f"({report.tokens_out / max(dt, 1e-9):.1f} tok/s), "
+              f"sim_time={report.sim_time:.0f} ticks={report.ticks} "
+              f"reroutes={report.reroutes}")
+        print(f"latency p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
+              f"p99={pct['p99']:.1f} (decode-step units)  "
+              f"compiles: decode={report.decode_compiles} "
+              f"prefill={report.prefill_compiles}")
+        print("log:", report.log.summary())
+        return
+
+    prompts = np.asarray(make_token_stream(args.batch, args.prompt_len,
+                                           cfg.vocab_size, seed=args.seed))
     t0 = time.time()
-    toks = generate(params, cfg, prompts, args.gen, impl=args.impl)
+    toks = engine.generate(params, prompts, args.gen)
     dt = time.time() - t0
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen}: {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print(f"arch={cfg.name} mode={args.mode} batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen}: {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s, "
+          f"compiles: decode={engine.decode_compiles} "
+          f"prefill={engine.prefill_compiles})")
     print("sample continuation:", np.asarray(toks[0])[:16].tolist())
 
 

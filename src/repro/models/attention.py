@@ -429,13 +429,17 @@ def multihead_attention(cfg: ModelConfig, p: Params, x: jax.Array,
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   window: Optional[int], dtype) -> Params:
-    """Global layers keep full KV; local layers keep a ring of size window."""
+    """Global layers keep full KV; local layers keep a ring of size window.
+
+    ``pos`` is tracked per batch row so serving slots can sit at different
+    absolute positions (continuous batching joins requests of mixed prompt
+    lengths into one decode executable)."""
     size = max_len if window is None else min(window, max_len)
     shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
     cache = {
         "k": jnp.zeros(shape, dtype),
         "v": jnp.zeros(shape, dtype),
-        "pos": jnp.full((size,), -1, jnp.int32),  # absolute pos per slot
+        "pos": jnp.full((batch, size), -1, jnp.int32),  # abs pos per row slot
     }
     return cache
 
@@ -444,17 +448,30 @@ def kv_cache_axes(window: Optional[int]) -> Dict[str, Tuple]:
     return {
         "k": ("batch", "kv_seq", "kv_heads", None),
         "v": ("batch", "kv_seq", "kv_heads", None),
-        "pos": (None,),
+        "pos": ("batch", None),
     }
 
 
 def cache_write(cache: Params, k: jax.Array, v: jax.Array, pos: jax.Array):
     """Write S new KV entries starting at absolute position ``pos``.
 
-    For ring (local) caches the write wraps modulo the ring size.
+    ``pos`` is a scalar (all rows at the same position — prefill and
+    lockstep decode) or a ``(B,)`` vector of per-row positions (serving
+    slots at different depths; single-token writes only).  For ring (local)
+    caches the write wraps modulo the ring size.
     """
     size = cache["k"].shape[1]
-    s = k.shape[1]
+    b, s = k.shape[0], k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        assert s == 1, "per-row cache writes are single-token (decode) only"
+        rows = jnp.arange(b)
+        idx = pos % size
+        return {
+            "k": cache["k"].at[rows, idx].set(k[:, 0]),
+            "v": cache["v"].at[rows, idx].set(v[:, 0]),
+            "pos": cache["pos"].at[rows, idx].set(pos),
+        }
     if s >= size:
         # keep the last `size` entries
         kk, vv = k[:, -size:], v[:, -size:]
@@ -465,7 +482,7 @@ def cache_write(cache: Params, k: jax.Array, v: jax.Array, pos: jax.Array):
         return {
             "k": jnp.take(kk, order, axis=1),
             "v": jnp.take(vv, order, axis=1),
-            "pos": jnp.take(newpos, order),
+            "pos": jnp.broadcast_to(jnp.take(newpos, order), (b, size)),
         }
     start = pos % size
     idx = (start + jnp.arange(s, dtype=jnp.int32)) % size
@@ -473,7 +490,7 @@ def cache_write(cache: Params, k: jax.Array, v: jax.Array, pos: jax.Array):
     return {
         "k": cache["k"].at[:, idx].set(k),
         "v": cache["v"].at[:, idx].set(v),
-        "pos": cache["pos"].at[idx].set(newpos),
+        "pos": cache["pos"].at[:, idx].set(newpos),
     }
 
 
@@ -502,10 +519,15 @@ def prefill_attention(cfg: ModelConfig, p: Params, x: jax.Array,
 def decode_attention(cfg: ModelConfig, p: Params, x: jax.Array,
                      cache: Params, pos: jax.Array, *,
                      window: Optional[int]) -> Tuple[jax.Array, Params]:
-    """One-token attention against the cache.  x: (B,1,D)."""
+    """One-token attention against the cache.  x: (B,1,D).
+
+    ``pos`` is a scalar (lockstep decode) or a ``(B,)`` vector of per-row
+    absolute positions (serving slots at different depths)."""
     b = x.shape[0]
     dtype = x.dtype
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = jnp.broadcast_to(pos, (b,))
+    positions = pos_b[:, None]
     if cfg.rope_kind == "mrope":
         positions = positions[..., None].repeat(3, axis=-1)
     q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dtype))
@@ -515,17 +537,17 @@ def decode_attention(cfg: ModelConfig, p: Params, x: jax.Array,
         q, k, v = q + p["bq"].astype(dtype), k + p["bk"].astype(dtype), v + p["bv"].astype(dtype)
     q = apply_rope(cfg, q, positions)
     k = apply_rope(cfg, k, positions)
-    cache = cache_write(cache, k, v, pos)
+    cache = cache_write(cache, k, v, pos_b if pos.ndim == 1 else pos)
     kc, vc, pc = cache["k"], cache["v"], cache["pos"]
     kc = shard_activation(kc, "batch", "kv_seq", "kv_heads", None)
     vc = shard_activation(vc, "batch", "kv_seq", "kv_heads", None)
     qg = _group(cfg, q)  # (B,1,K,G,hd)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc) * _scale(cfg)
     s = softcap(s, cfg.attn_logit_softcap)
-    valid = (pc >= 0) & (pc <= pos)
+    valid = (pc >= 0) & (pc <= pos_b[:, None])           # (B, size)
     if window is not None:
-        valid &= (pos - pc) < window
-    s = jnp.where(valid[None, None, None, None, :], s.astype(jnp.float32), NEG_INF)
+        valid &= (pos_b[:, None] - pc) < window
+    s = jnp.where(valid[:, None, None, None, :], s.astype(jnp.float32), NEG_INF)
     s = shard_activation(s, "batch", "kv_heads", None, None, "kv_seq")
     pr = jax.nn.softmax(s, axis=-1).astype(dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", pr, vc).reshape(q.shape)

@@ -766,6 +766,99 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
     return logits, {"stack": new_stack, "rem": new_rem}
 
 
+def partition_cache(cache: Params, cfg: ModelConfig, cuts: Sequence[int]
+                    ) -> List[Params]:
+    """Partition a decode cache at layers ``cuts`` into ``len(cuts)+1``
+    per-stage caches, mirroring :func:`partition_params`: the stacked
+    super-block caches slice along the leading scan axis; the remainder
+    layers' caches ride with the final (server) stage."""
+    cuts = _check_cuts(cfg, cuts)
+    bounds = [c // cfg.period for c in cuts]
+    stages: List[Params] = [{"stack": jax.tree.map(lambda a: a[:bounds[0]],
+                                                   cache["stack"])}]
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        stages.append({"stack": jax.tree.map(
+            lambda a, lo=lo, hi=hi: a[lo:hi], cache["stack"])})
+    stages.append({"stack": jax.tree.map(lambda a, lo=bounds[-1]: a[lo:],
+                                         cache["stack"]),
+                   "rem": cache["rem"]})
+    return stages
+
+
+def join_cache_stages(stages: Sequence[Params]) -> Params:
+    """Invert :func:`partition_cache`."""
+    stack = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                         *[s["stack"] for s in stages])
+    return {"stack": stack, "rem": stages[-1]["rem"]}
+
+
+def stage_decode_step(stage_params: Params, cfg: ModelConfig, x: jax.Array,
+                      cache: Params, pos: jax.Array, stage_index: int,
+                      num_stages: int, *,
+                      decode_window_override: Optional[int] = None
+                      ) -> Tuple[jax.Array, Params]:
+    """One decode step through a single pipeline stage.
+
+    Stage 0 interprets ``x`` as tokens ``(B, 1)`` (embedding + the client's
+    super-blocks); intermediate stages take the upstream hop activation
+    ``(B, 1, D)``.  The final stage runs its super-blocks, the remainder
+    layers, final norm, and unembedding → logits.  Chaining all stages
+    (:func:`split_decode_step`) reproduces :func:`decode_step` exactly —
+    stage boundaries only move activations across hops."""
+    last = stage_index == num_stages - 1
+    if stage_index == 0:
+        x = _embed(cfg, stage_params, x, None)
+    period_specs, n_full, _ = _superblock_layout(cfg)
+
+    def scan_body(x, inp):
+        bp, bc = inp
+        new_c = []
+        for j, spec in enumerate(period_specs):
+            x, cj = _decode_layer(cfg, spec, bp[j], x, bc[j], pos,
+                                  decode_window_override)
+            new_c.append(cj)
+        return x, new_c
+
+    n_stage = jax.tree.leaves(stage_params["stack"])[0].shape[0]
+    if n_stage > 0:
+        x, new_stack = jax.lax.scan(scan_body, x,
+                                    (stage_params["stack"], cache["stack"]))
+    else:
+        new_stack = cache["stack"]
+    new_cache: Params = {"stack": new_stack}
+    if last:
+        all_specs = cfg.layer_specs()
+        rem = stage_params.get("rem", [])
+        n_rem_start = cfg.num_layers - len(rem)
+        new_rem = []
+        for i, lp in enumerate(rem):
+            spec = all_specs[n_rem_start + i]
+            x, c = _decode_layer(cfg, spec, lp, x, cache["rem"][i], pos,
+                                 decode_window_override)
+            new_rem.append(c)
+        new_cache["rem"] = new_rem
+        x = apply_norm(cfg, stage_params["final_norm"], x)
+        x = _unembed(cfg, stage_params, x)
+    return x, new_cache
+
+
+def split_decode_step(stages: Sequence[Params], cfg: ModelConfig,
+                      tokens: jax.Array, cache_stages: Sequence[Params],
+                      pos: jax.Array, *,
+                      decode_window_override: Optional[int] = None
+                      ) -> Tuple[jax.Array, List[Params]]:
+    """One decode step through the full client→edge→server pipeline:
+    :func:`decode_step` with the params *and* cache partitioned at the WSSL
+    cuts.  Returns (logits, new per-stage caches)."""
+    x: jax.Array = tokens
+    new_caches: List[Params] = []
+    for i, (sp, sc) in enumerate(zip(stages, cache_stages)):
+        x, nc = stage_decode_step(sp, cfg, x, sc, pos, i, len(stages),
+                                  decode_window_override=decode_window_override)
+        new_caches.append(nc)
+    return x, new_caches
+
+
 def _prefill_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
                    cache: Params, positions: jax.Array, impl: str
                    ) -> Tuple[jax.Array, Params]:

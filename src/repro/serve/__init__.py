@@ -1,0 +1,34 @@
+"""Fault-aware serving subsystem.
+
+Refactors the decode path (formerly a host-side Python loop in
+``launch/serve.py``) into a scan-fused, replica-routed engine:
+
+* :mod:`repro.serve.engine`    — ``DecodeEngine``: one ``lax.scan``-fused
+  decode executable per (arch, batch, chunk) shape, AOT-compiled once and
+  reused across requests, scenarios, and replicas; merged-model and
+  ``split`` (client→edge→server) modes share the discipline.
+* :mod:`repro.serve.scheduler` — request queue + continuous-batching slot
+  admission (per-request lengths via per-slot positions and forced-token
+  replay, so mixed prompt/gen lengths share one executable).
+* :mod:`repro.serve.router`    — R serving replicas (the ``i % R`` routing
+  idiom from ``core/split.py``) driven through ``repro.sim`` scenarios:
+  dropped replica ⇒ re-route + re-prefill (sync bytes), slow host ⇒
+  latency inflation via ``sim.faults.client_latencies``.
+* :mod:`repro.serve.metrics`   — p50/p95/p99 tail latency and
+  degraded-mode output-agreement metrics.
+
+See docs/serving.md.
+"""
+
+from repro.serve.engine import BatchState, DecodeEngine, get_engine
+from repro.serve.metrics import latency_percentiles, output_agreement
+from repro.serve.router import FaultRoutedServer, ServeParams, ServeReport
+from repro.serve.scheduler import (PendingWork, Request, SlotScheduler,
+                                   synthetic_requests)
+
+__all__ = [
+    "BatchState", "DecodeEngine", "get_engine",
+    "latency_percentiles", "output_agreement",
+    "FaultRoutedServer", "ServeParams", "ServeReport",
+    "PendingWork", "Request", "SlotScheduler", "synthetic_requests",
+]

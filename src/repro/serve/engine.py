@@ -1,0 +1,276 @@
+"""The scan-fused decode engine.
+
+The legacy serving path re-jitted a fresh ``decode_step`` lambda inside
+every ``generate()`` call and stepped it from a host-side Python loop —
+one dispatch (and on the first call one *compile*) per generated token.
+``DecodeEngine`` replaces that with a single ``lax.scan`` over the decode
+step, AOT-compiled (``jit(...).lower(...).compile()``) exactly once per
+(arch, batch, chunk, cache-size) shape and reused across requests,
+scenarios, and replicas.  The engine is **params-free**: model parameters
+enter the compiled executable as arguments, so R serving replicas (and
+repeated ``generate`` calls) all share one executable.
+
+Three shape families of executables exist:
+
+* **prefill** — full-sequence forward filling the unified KV/state cache
+  (dense KV, SSM state, RG-LRU state — one pytree), one per distinct
+  (batch, prompt_len, cache_size).  Prompt lengths are exact; there is no
+  padding, so recurrent (SSM / RG-LRU) states are never contaminated.
+* **chunk**  — ``lax.scan`` over T decode steps with *per-slot* absolute
+  positions (``pos`` is a ``(B,)`` vector; the KV cache tracks positions
+  per row) and a forced-token lane: ``forced``/``force_len`` teacher-force
+  the first ``force_len[b]`` steps of slot *b*, which is how a re-routed
+  request replays its already-emitted tokens through the SAME executable
+  instead of compiling a re-prefill at an arbitrary length.  Temperature
+  is a dynamic scalar (0 = greedy argmax).
+* **split**  — the same chunk, decoding through the client→edge→server
+  pipeline (``transformer.split_decode_step``) at the WSSL cuts instead of
+  the merged model; bit-for-bit identical logits, but every decode step
+  crosses ``len(cuts)`` activation hops (accounted by the router).
+
+``decode_compiles`` / ``prefill_compiles`` count actual XLA compilations
+(AOT executables cannot retrace), which is what the serving tests pin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import transformer as tf
+
+Params = Any
+
+
+@dataclasses.dataclass
+class BatchState:
+    """Mutable per-replica decode state: the batched cache plus each
+    slot's current token and next absolute position."""
+
+    cache: Params
+    tok: jax.Array      # (B, 1) int32 — last token per slot
+    pos: jax.Array      # (B,)   int32 — next absolute position per slot
+    max_len: int
+
+
+def _scatter_slot(dst: Params, src: Params, slot: int) -> Params:
+    """Write a batch-1 cache into row ``slot`` of a batched cache.
+
+    Stacked super-block leaves carry the scan axis first (batch at axis 1);
+    remainder-layer leaves have batch at axis 0.  The whole row is
+    replaced, which also wipes any stale validity from the slot's previous
+    occupant (fresh caches mark every position -1)."""
+    stack = jax.tree.map(lambda d, s: d.at[:, slot].set(s[:, 0]),
+                         dst["stack"], src["stack"])
+    rem = jax.tree.map(lambda d, s: d.at[slot].set(s[0]),
+                       dst["rem"], src["rem"])
+    return {"stack": stack, "rem": rem}
+
+
+class DecodeEngine:
+    """Compile-once decode engine for one architecture.
+
+    ``cuts=None`` serves the merged WSSL global model; a cut tuple serves
+    through the client→edge→server pipeline stages (same logits, per-hop
+    activation crossings).  All compiled executables take ``params`` as an
+    argument — replicas with synced params share every executable."""
+
+    def __init__(self, cfg: ModelConfig, *, impl: str = "dense",
+                 cuts: Optional[Sequence[int]] = None,
+                 decode_window_override: Optional[int] = None):
+        self.cfg = cfg
+        self.impl = impl
+        self.cuts = tuple(int(c) for c in cuts) if cuts else None
+        self.decode_window_override = decode_window_override
+        self._executables: Dict[Tuple, Any] = {}
+        self.decode_compiles = 0
+        self.prefill_compiles = 0
+
+    # -- topology ----------------------------------------------------------
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.cuts) + 1 if self.cuts else 1
+
+    @property
+    def num_hops(self) -> int:
+        """Activation crossings per decode step (0 for the merged model)."""
+        return len(self.cuts) if self.cuts else 0
+
+    # -- compiled primitives ----------------------------------------------
+
+    def _prefill_exec(self, params, prompts, cache):
+        b, s0 = prompts.shape
+        key = ("prefill", b, s0) + tuple(
+            l.shape for l in jax.tree.leaves(cache))
+        if key not in self._executables:
+            def run(params, prompts, cache):
+                logits, cache = tf.prefill(params, self.cfg, prompts,
+                                           cache=cache, impl=self.impl)
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+                return tok.astype(jnp.int32), cache
+
+            self._executables[key] = (
+                jax.jit(run).lower(params, prompts, cache).compile())
+            self.prefill_compiles += 1
+        return self._executables[key]
+
+    def _chunk_exec(self, params, tok, cache, pos, forced, force_len, rng,
+                    temperature):
+        b, t_chunk = forced.shape
+        key = ("chunk", b, t_chunk) + tuple(
+            l.shape for l in jax.tree.leaves(cache))
+        if key not in self._executables:
+            def run(params, tok, cache, pos, forced, force_len, rng,
+                    temperature):
+                # split mode: partition params/cache ONCE per chunk and
+                # carry the per-stage caches through the scan (a
+                # partition/join pair inside the loop body would cross the
+                # carry and re-materialize every cache leaf per token)
+                if self.cuts is not None:
+                    stages = tf.partition_params(params, self.cfg,
+                                                 self.cuts)
+                    cache = tf.partition_cache(cache, self.cfg, self.cuts)
+
+                def step(carry, xs):
+                    t, forced_t = xs
+                    tok, cache, pos, rng = carry
+                    if self.cuts is None:
+                        logits, cache = tf.decode_step(
+                            params, self.cfg, tok, cache, pos,
+                            decode_window_override=self.decode_window_override)
+                    else:
+                        logits, cache = tf.split_decode_step(
+                            stages, self.cfg, tok, cache, pos,
+                            decode_window_override=self.decode_window_override)
+                    lg = logits[:, 0]
+                    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                    rng, sub = jax.random.split(rng)
+                    sampled = jax.random.categorical(
+                        sub, lg / jnp.maximum(temperature, 1e-6)
+                    ).astype(jnp.int32)
+                    nxt = jnp.where(temperature > 0, sampled, greedy)
+                    nxt = jnp.where(t < force_len, forced_t, nxt)
+                    return (nxt[:, None], cache, pos + 1, rng), nxt
+
+                n = forced.shape[1]
+                (tok, cache, pos, rng), ys = jax.lax.scan(
+                    step, (tok, cache, pos, rng),
+                    (jnp.arange(n), jnp.swapaxes(forced, 0, 1)))
+                if self.cuts is not None:
+                    cache = tf.join_cache_stages(cache)
+                return jnp.swapaxes(ys, 0, 1), tok, cache, pos
+
+            self._executables[key] = (
+                jax.jit(run).lower(params, tok, cache, pos, forced,
+                                   force_len, rng, temperature).compile())
+            self.decode_compiles += 1
+        return self._executables[key]
+
+    # -- cache / state -----------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        return tf.init_cache(
+            self.cfg, batch, max_len,
+            decode_window_override=self.decode_window_override)
+
+    def new_batch_state(self, slots: int, max_len: int) -> BatchState:
+        """Empty slots decode garbage in lockstep with the live ones
+        (slot-granularity admission) — safely, because ``decode_attention``
+        writes each row's K/V at its current position *before* building
+        the validity mask, so even an all-empty row attends to at least
+        its own fresh entry.  Admission replaces the whole row."""
+        return BatchState(cache=self.init_cache(slots, max_len),
+                          tok=jnp.zeros((slots, 1), jnp.int32),
+                          pos=jnp.ones((slots,), jnp.int32),
+                          max_len=max_len)
+
+    # -- serving primitives ------------------------------------------------
+
+    def admit(self, state: BatchState, params: Params,
+              prompt: np.ndarray, slot: int) -> int:
+        """Prefill one request at its exact prompt length into ``slot``.
+
+        Returns the request's first generated token (greedy over the last
+        prompt position — re-admissions after a replica drop re-derive the
+        same token deterministically and replay the rest)."""
+        prompt = jnp.asarray(np.asarray(prompt), jnp.int32)[None]
+        length = prompt.shape[1]
+        if length >= state.max_len:
+            raise ValueError(
+                f"prompt of length {length} does not fit a max_len="
+                f"{state.max_len} cache with room to decode; global KV "
+                f"entries past max_len would silently wrap and overwrite "
+                f"the prompt")
+        cache1 = self.init_cache(1, state.max_len)
+        exe = self._prefill_exec(params, prompt, cache1)
+        tok, cache1 = exe(params, prompt, cache1)
+        state.cache = _scatter_slot(state.cache, cache1, slot)
+        state.tok = state.tok.at[slot].set(tok[0])
+        state.pos = state.pos.at[slot].set(length)
+        return int(tok[0, 0])
+
+    def decode_chunk(self, state: BatchState, params: Params,
+                     forced: np.ndarray, force_len: np.ndarray,
+                     rng: jax.Array, temperature: float = 0.0) -> np.ndarray:
+        """Advance every slot by ``forced.shape[1]`` tokens (one fused
+        executable).  Returns the (B, T) emitted tokens."""
+        forced = jnp.asarray(np.asarray(forced), jnp.int32)
+        force_len = jnp.asarray(np.asarray(force_len), jnp.int32)
+        temp = jnp.asarray(temperature, jnp.float32)
+        exe = self._chunk_exec(params, state.tok, state.cache, state.pos,
+                               forced, force_len, rng, temp)
+        toks, tok, cache, pos = exe(params, state.tok, state.cache,
+                                    state.pos, forced, force_len, rng, temp)
+        state.tok, state.cache, state.pos = tok, cache, pos
+        return np.asarray(toks)
+
+    # -- one-shot batched generation --------------------------------------
+
+    def generate(self, params: Params, prompts: jax.Array, gen: int, *,
+                 temperature: float = 0.0,
+                 rng: Optional[jax.Array] = None) -> jax.Array:
+        """Batched generation, compiled once per (batch, prompt, gen) shape
+        — the drop-in replacement for the legacy host-side decode loop
+        (bit-for-bit identical greedy tokens, golden-tested)."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        b, s0 = prompts.shape
+        cache = self.init_cache(b, s0 + gen)
+        exe = self._prefill_exec(params, prompts, cache)
+        tok, cache = exe(params, prompts, cache)
+        out = [tok]
+        if gen > 1:
+            if temperature > 0 and rng is None:
+                raise ValueError("temperature > 0 requires an rng key")
+            rng = jax.random.PRNGKey(0) if rng is None else rng
+            forced = jnp.zeros((b, gen - 1), jnp.int32)
+            force_len = jnp.zeros((b,), jnp.int32)
+            pos = jnp.full((b,), s0, jnp.int32)
+            temp = jnp.asarray(temperature, jnp.float32)
+            cexe = self._chunk_exec(params, tok, cache, pos, forced,
+                                    force_len, rng, temp)
+            ys, _, _, _ = cexe(params, tok, cache, pos, forced, force_len,
+                               rng, temp)
+            out.append(ys)
+        return jnp.concatenate(out, axis=1)
+
+
+_ENGINES: Dict[Tuple, DecodeEngine] = {}
+
+
+def get_engine(cfg: ModelConfig, *, impl: str = "dense",
+               cuts: Optional[Sequence[int]] = None,
+               decode_window_override: Optional[int] = None) -> DecodeEngine:
+    """Process-wide engine cache: repeated ``generate()`` calls (and all
+    replicas of a served model) reuse one engine and its executables."""
+    key = (cfg, impl, tuple(cuts) if cuts else None, decode_window_override)
+    if key not in _ENGINES:
+        _ENGINES[key] = DecodeEngine(
+            cfg, impl=impl, cuts=cuts,
+            decode_window_override=decode_window_override)
+    return _ENGINES[key]

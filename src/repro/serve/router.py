@@ -1,0 +1,234 @@
+"""Fault-aware replica routing, driven by ``repro.sim`` scenarios.
+
+R serving replicas hold identical (synced) params and share the engine's
+compiled executables; request ``rid`` homes to replica ``rid % R`` — the
+same ``i % R`` fault-domain routing the training pipeline uses for its
+edge-hop replicas (``core/split.py``).  Each simulation tick re-samples a
+:class:`~repro.sim.faults.FaultPlan` **over the replica axis** (the
+scenario's "clients" are the replicas):
+
+* ``plan.keep[r] == 0`` — replica r is down this tick: its in-flight and
+  queued requests re-route to the next alive replica, where they are
+  re-prefilled and their credited tokens replayed (traffic accounted as
+  sync bytes, like a training-side resync).  The replica restarts with an
+  empty cache.
+* ``client_latencies(plan, R)[r] > 1`` — replica r is a slow host: every
+  chunk (and prefill) it serves takes proportionally longer on the
+  simulated clock, inflating its requests' latencies.
+
+Because scenarios only steer *host-side routing and the clock*, every
+scenario shares the engine's single decode executable — the serving analog
+of the one-executable training rounds.
+
+The simulated clock is measured in clean decode-step units: a chunk of T
+tokens costs T × slowdown; prefilling an L-token prompt costs
+L × ``prefill_unit`` × slowdown (prefill parallelism makes per-token
+prefill cheaper than decode).  Request latency = completion − arrival.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import Scenario
+from repro.core.protocol import (ServeLog, reroute_sync_bytes,
+                                 serve_hop_bytes)
+from repro.serve.engine import BatchState, DecodeEngine
+from repro.serve.metrics import latency_percentiles
+from repro.serve.scheduler import PendingWork, Request, SlotScheduler
+from repro.sim import faults
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeParams:
+    """Serving-plane knobs (the ShapeConfig of the serving world)."""
+
+    replicas: int = 2
+    slots: int = 4              # decode slots per replica
+    chunk: int = 8              # tokens per fused decode call
+    max_len: int = 128          # cache capacity per slot
+    prefill_unit: float = 0.25  # decode-step units per prefilled token
+    temperature: float = 0.0
+    max_ticks: int = 100_000
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """One scenario's serving trace."""
+
+    scenario: str
+    outputs: Dict[int, List[int]]
+    latencies: Dict[int, float]
+    percentiles: Dict[str, float]
+    log: ServeLog
+    sim_time: float
+    ticks: int
+    reroutes: int
+    decode_compiles: int
+    prefill_compiles: int
+
+    @property
+    def tokens_out(self) -> int:
+        return sum(len(v) for v in self.outputs.values())
+
+
+class FaultRoutedServer:
+    """Serve a request set across R fault-injected replicas."""
+
+    def __init__(self, engine: DecodeEngine, params: Params,
+                 serve: ServeParams = ServeParams(),
+                 scenario: Optional[Scenario] = None):
+        self.engine = engine
+        self.params = params
+        self.p = serve
+        self.scenario = scenario if scenario is not None else Scenario()
+
+    # -- helpers -----------------------------------------------------------
+
+    def _next_alive(self, home: int, keep: np.ndarray) -> int:
+        """First alive replica at or after ``home`` (mod R); if every
+        replica is down this tick, stay home — the work waits there."""
+        r_count = self.p.replicas
+        for d in range(r_count):
+            r = (home + d) % r_count
+            if keep[r] > 0:
+                return r
+        return home
+
+    # -- main loop ---------------------------------------------------------
+
+    def run(self, requests: Sequence[Request]) -> ServeReport:
+        p, engine = self.p, self.engine
+        r_count = p.replicas
+        scheds = [SlotScheduler(p.slots) for _ in range(r_count)]
+        states: List[Optional[BatchState]] = [None] * r_count
+        busy_until = [0.0] * r_count
+        outputs: Dict[int, List[int]] = {}
+        latencies: Dict[int, float] = {}
+        log = ServeLog()
+        itemsize = jnp.dtype(self.engine.cfg.dtype).itemsize
+        d_model = self.engine.cfg.d_model
+        num_hops = self.engine.num_hops
+
+        sp = faults.scenario_params(self.scenario)
+        plan_rng = jax.random.PRNGKey(p.seed)
+        decode_rng = jax.random.PRNGKey(p.seed + 1)
+
+        for req in requests:
+            if req.prompt_len + req.max_new + p.chunk > p.max_len:
+                raise ValueError(
+                    f"request {req.rid}: prompt_len ({req.prompt_len}) + "
+                    f"max_new ({req.max_new}) + chunk ({p.chunk}) exceeds "
+                    f"max_len ({p.max_len}); global KV entries would wrap "
+                    f"and silently overwrite the prompt")
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+
+        tick = 0
+        reroutes = 0
+        chunk_time = float(p.chunk)
+        while tick < p.max_ticks and (
+                pending or any(s.has_work for s in scheds)):
+            now = tick * chunk_time
+            while pending and pending[0].arrival <= now:
+                req = pending.pop(0)
+                scheds[req.rid % r_count].submit(PendingWork(req))
+            if not any(s.has_work for s in scheds):
+                tick += 1                    # idle until the next arrival
+                continue
+            plan = faults.sample_fault_plan(
+                jax.random.fold_in(plan_rng, tick), sp, r_count)
+            keep = np.asarray(plan.keep)
+            slowdown = np.asarray(faults.client_latencies(plan, r_count))
+
+            # -- replica drops: dump state, re-route (the re-prefill cost
+            # is charged when the work is actually re-admitted) -----------
+            for r in range(r_count):
+                if keep[r] > 0 or not scheds[r].has_work:
+                    if keep[r] <= 0:
+                        states[r] = None     # a down replica loses its cache
+                    continue
+                in_flight = scheds[r].num_active
+                moved = scheds[r].drain()
+                states[r] = None
+                busy_until[r] = now
+                for w in moved:
+                    scheds[self._next_alive(w.req.rid % r_count,
+                                            keep)].submit(w)
+                reroutes += in_flight
+                if in_flight:
+                    log.record(tick, r, 0, 0, rerouted=in_flight)
+
+            # -- alive replicas: admit at slot granularity, decode a chunk -
+            for r in range(r_count):
+                sched = scheds[r]
+                if keep[r] <= 0 or now < busy_until[r] or not sched.has_work:
+                    continue
+                if states[r] is None:
+                    states[r] = engine.new_batch_state(p.slots, p.max_len)
+                t_cost = 0.0
+                admitted = 0
+                prefill_tokens = 0
+                bytes_sync = 0
+                tokens_credited = 0
+                for slot, work in sched.admissions():
+                    fresh = not work.done
+                    tok0 = engine.admit(states[r], self.params,
+                                        work.req.prompt, slot)
+                    sched.activate(slot, work, tok0)
+                    t_cost += work.req.prompt_len * p.prefill_unit
+                    prefill_tokens += work.req.prompt_len
+                    admitted += 1
+                    if fresh:                # the prefill token is credited
+                        tokens_credited += 1
+                    else:                    # re-prefill after a drop: the
+                        # prompt + credited tokens were re-shipped here
+                        bytes_sync += reroute_sync_bytes(
+                            work.req.prompt_len, len(work.done) - 1)
+                if sched.num_active:
+                    forced, force_len = sched.force_buffers(p.chunk)
+                    rng = jax.random.fold_in(decode_rng,
+                                             tick * r_count + r)
+                    toks = engine.decode_chunk(states[r], self.params,
+                                               forced, force_len, rng,
+                                               p.temperature)
+                    t_cost += chunk_time
+                    end = now + t_cost * float(slowdown[r])
+                    finished, chunk_credited = sched.credit_chunk(toks)
+                    tokens_credited += chunk_credited
+                    for slot, active in finished:
+                        rid = active.req.rid
+                        outputs[rid] = list(active.done)
+                        latencies[rid] = end - active.req.arrival
+                        sched.release(slot)
+                    busy_until[r] = end
+                # every decode step ships the whole batch across each hop
+                # (garbage slots included — that is the physical crossing);
+                # admissions re-cross their prompt activations too
+                hop_tokens = (p.slots * p.chunk if sched.num_active or
+                              tokens_credited else 0) + prefill_tokens
+                log.record(tick, r, admitted, tokens_credited,
+                           bytes_per_hop=serve_hop_bytes(
+                               hop_tokens, d_model, itemsize, num_hops),
+                           bytes_sync=bytes_sync)
+            tick += 1
+
+        return ServeReport(
+            scenario=self.scenario.name,
+            outputs=outputs,
+            latencies=latencies,
+            percentiles=latency_percentiles(list(latencies.values())),
+            log=log,
+            sim_time=tick * chunk_time,
+            ticks=tick,
+            reroutes=reroutes,
+            decode_compiles=engine.decode_compiles,
+            prefill_compiles=engine.prefill_compiles,
+        )

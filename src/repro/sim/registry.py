@@ -71,6 +71,16 @@ register_scenario(Scenario(name="async-stragglers", straggler_fraction=0.5,
 register_scenario(Scenario(name="async-byzantine", sign_flip_fraction=0.25,
                            straggler_fraction=0.25,
                            straggler_slowdown=8.0))
+# serving-plane presets (repro.serve.router): the fault plan is sampled
+# over the REPLICA axis — dropout_prob is a per-tick replica crash
+# (requests re-routed + re-prefilled on the next alive replica), and the
+# straggler knobs mark slow serving hosts whose chunks take
+# straggler_slowdown× longer on the simulated clock.  Same Scenario
+# dataclass, same dynamic lowering, so the training rounds accept these
+# presets too (where they read as client faults).
+register_scenario(Scenario(name="replica-drop", dropout_prob=0.25))
+register_scenario(Scenario(name="slow-host", straggler_fraction=0.5,
+                           straggler_slowdown=4.0))
 
 
 def get_scenario(name: str) -> Scenario:

@@ -349,6 +349,106 @@ def test_agg_params_lowering_and_dynamic_dispatch():
 # ---------------------------------------------------------------------------
 
 
+# ---------------------------------------------------------------------------
+# geometric median (Weiszfeld) + norm clipping
+# ---------------------------------------------------------------------------
+
+
+def _poisoned_stack(scale=50.0, n=6, seed=0):
+    """n clients near 1.0, client 0 amplified by ``scale``."""
+    rng = np.random.default_rng(seed)
+    honest = jnp.asarray(rng.normal(size=(n, 4, 3)) * 0.1 + 1.0, jnp.float32)
+    stacked = {"w": honest.at[0].set(honest[0] * scale)}
+    return stacked, np.asarray(honest[1:]).mean(axis=0)
+
+
+def test_new_rules_registered():
+    assert {"geometric_median", "norm_clip"} <= set(list_aggregators())
+    assert not get_aggregator("geometric_median").weighted
+    assert get_aggregator("norm_clip").weighted
+    with pytest.raises(ValueError):
+        AggregationConfig(rule="norm_clip", clip_factor=0.0)
+
+
+@pytest.mark.parametrize("rule", ["geometric_median", "norm_clip"])
+def test_new_rules_downweight_scaled_outlier(rule):
+    """A 50×-amplified client drags the uniform mean an order of magnitude
+    off the honest center; both new rules must stay within the honest
+    noise floor."""
+    stacked, honest_mean = _poisoned_stack()
+    n = 6
+    imp, mask = jnp.full((n,), 1 / n), jnp.ones((n,))
+    cfg = WSSLConfig(num_clients=n, agg=AggregationConfig(rule=rule))
+    out = aggregate_clients(stacked, imp, mask, cfg)
+    err = float(jnp.abs(out["w"] - honest_mean).max())
+    mean_err = float(jnp.abs(
+        np.asarray(stacked["w"]).mean(axis=0) - honest_mean).max())
+    assert err < 0.2, f"{rule}: {err}"
+    assert err < mean_err / 10.0
+
+
+def test_geometric_median_exact_on_identical_clients():
+    x = jnp.full((5, 3, 2), 2.5, jnp.float32)
+    out = aggregation.geometric_median_average({"w": x}, jnp.ones((5,)))
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.full((3, 2), 2.5), rtol=1e-6)
+
+
+def test_geometric_median_respects_mask():
+    """A dead poisoned client must not move the center at all (zero
+    Weiszfeld weight at every iteration), and an empty mask falls back to
+    all clients voting."""
+    stacked, honest_mean = _poisoned_stack()
+    mask = jnp.ones((6,)).at[0].set(0.0)
+    out = aggregation.geometric_median_average(stacked, mask)
+    honest_only = {"w": stacked["w"][1:]}
+    want = aggregation.geometric_median_average(honest_only, jnp.ones((5,)))
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(want["w"]),
+                               atol=1e-5)
+    empty = aggregation.geometric_median_average(stacked, jnp.zeros((6,)))
+    assert np.isfinite(np.asarray(empty["w"])).all()
+
+
+def test_norm_clip_near_importance_mean_on_clean_population():
+    """With no outliers every deviation norm sits near the median, so
+    clipping barely bites and norm_clip tracks the importance mean."""
+    rng = np.random.default_rng(1)
+    stacked = {"w": jnp.asarray(rng.normal(size=(6, 4, 3)) * 0.1 + 1.0,
+                                jnp.float32)}
+    imp = jnp.asarray(rng.uniform(0.1, 0.3, size=(6,)), jnp.float32)
+    imp = imp / imp.sum()
+    mask = jnp.ones((6,))
+    clipped = aggregate_clients(
+        stacked, imp, mask,
+        WSSLConfig(agg=AggregationConfig(rule="norm_clip", clip_factor=2.0)))
+    mean = aggregate_clients(
+        stacked, imp, mask,
+        WSSLConfig(agg=AggregationConfig(rule="importance")))
+    np.testing.assert_allclose(np.asarray(clipped["w"]),
+                               np.asarray(mean["w"]), atol=0.02)
+
+
+def test_norm_clip_dynamic_clip_factor_one_executable():
+    """clip_factor reaches the rule as a dynamic AggParams scalar: three
+    settings, one trace."""
+    stacked, _ = _poisoned_stack()
+    cfg = WSSLConfig(num_clients=6,
+                     agg=AggregationConfig(rule="norm_clip"))
+    fn = jax.jit(lambda s, i, m, p: aggregate_clients(s, i, m, cfg,
+                                                      params=p))
+    imp, mask = jnp.full((6,), 1 / 6), jnp.ones((6,))
+    outs = []
+    for c in (0.5, 1.0, 4.0):
+        outs.append(fn(stacked, imp, mask, agg_params(
+            AggregationConfig(rule="norm_clip", clip_factor=c))))
+    assert fn._cache_size() == 1
+    # a looser cap admits more of the poisoned update
+    d_tight = float(jnp.abs(outs[0]["w"]).max())
+    d_loose = float(jnp.abs(outs[2]["w"]).max())
+    assert d_loose > d_tight
+    assert float(agg_params(AggregationConfig()).clip_factor) == 1.0
+
+
 def _plan(n, adaptive, margin=1.5, keep=None):
     z = jnp.asarray(adaptive, jnp.float32) * margin
     return sim_faults.FaultPlan(
@@ -441,7 +541,9 @@ def _tiny_round(rule, **agg_kw):
 
 @pytest.mark.parametrize("rule,kw", [("median", {}),
                                      ("krum", {"byzantine_f": 1}),
-                                     ("multi_krum", {"byzantine_f": 1})])
+                                     ("multi_krum", {"byzantine_f": 1}),
+                                     ("geometric_median", {}),
+                                     ("norm_clip", {"clip_factor": 1.5})])
 def test_robust_rules_drive_fused_round(rule, kw):
     state, m = _tiny_round(rule, **kw)
     leaf = np.asarray(jax.tree.leaves(state.client_stack)[0])

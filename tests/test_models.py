@@ -121,7 +121,8 @@ def test_kv_cache_ring_wraparound():
         cache = attn.cache_write(cache, k * pos, k * pos,
                                  jnp.asarray(pos, jnp.int32))
     pc = np.asarray(cache["pos"])
-    assert sorted(pc.tolist()) == list(range(12, 20))
+    assert pc.shape == (1, window)          # positions tracked per batch row
+    assert sorted(pc[0].tolist()) == list(range(12, 20))
 
 
 def test_chunked_xent_matches_full():
