@@ -93,6 +93,20 @@ def main(fast: bool = False) -> List[str]:
             f"comm_gemma3_multihop_{tag},0,{hops};"
             f"total_up_down_GB={(mh['up']+mh['down'])/1e9:.2f};"
             f"cuts={'-'.join(str(c) for c in resolved)}")
+    # update-path compression (repro.compress): raw vs wire bytes of the
+    # per-round client-stage upload under each scheme, gait + LLM scale
+    for tag, tree, nsel in (("gait", cp, 1),
+                            ("gemma3",
+                             jax.ShapeDtypeStruct((client_stage_params,),
+                                                  np.dtype("float16")), 8)):
+        raw = protocol.tree_bytes(tree)
+        cols = []
+        for scheme, rate in (("topk", 0.04), ("int8", 0.04), ("int4", 0.04)):
+            comp = protocol.compressed_update_bytes(tree, scheme, rate)
+            cols.append(f"{scheme}_MB={nsel * comp / 1e6:.3f};"
+                        f"{scheme}_ratio={raw / comp:.2f}")
+        lines.append(f"comm_compress_{tag},0,raw_MB={nsel * raw / 1e6:.3f};"
+                     + ";".join(cols))
     per = (time.time() - t0) * 1e6 / max(len(lines), 1)
     return [l.replace(",0,", f",{per:.0f},", 1) for l in lines]
 

@@ -1,5 +1,6 @@
 """§Roofline summary: collates experiments/dryrun/*.json into the
-per-(arch × shape × mesh) three-term table."""
+per-(arch × shape × mesh) three-term table, plus analytic rows for the
+WSSL aggregation/compression kernels (kernels/)."""
 
 from __future__ import annotations
 
@@ -33,17 +34,45 @@ def format_table(recs: List[dict]) -> List[str]:
     return rows
 
 
+def kernel_rows(n: int = 16, m: int = 50_000_000) -> List[str]:
+    """Analytic roofline rows for the WSSL update-path kernels (kernels/)
+    on an (N clients × M params) stacked client stage.  All four are pure
+    streaming passes (O(1) flops per element), so the bound is HBM
+    bandwidth and the interesting column is bytes touched per pass:
+
+      wavg       reads N·M fp32 + writes M fp32
+      quantize   reads 2·N·M fp32 (x + uniform noise) + writes N·M int8
+      dequantize reads N·M int8 + writes N·M fp32
+      topk_mask  reads N·M fp32 + writes N·M fp32
+    """
+    from repro.roofline.analysis import HBM_BW
+    rows = []
+    for name, rd, wr, flops_per in (
+            ("wavg", n * m * 4, m * 4, 2 * n),
+            ("quantize_stochastic", 2 * n * m * 4, n * m * 1, 4 * n),
+            ("dequantize", n * m * 1, n * m * 4, n),
+            ("topk_mask", n * m * 4, n * m * 4, 2 * n)):
+        bytes_total = rd + wr
+        t_mem = bytes_total / HBM_BW
+        intensity = (flops_per * m) / bytes_total
+        rows.append(
+            f"roofline_kernel_{name},0,"
+            f"bytes_GB={bytes_total / 1e9:.2f};"
+            f"ai_flops_per_byte={intensity:.3f};"
+            f"t_mem_ms={t_mem * 1e3:.2f};bound=memory")
+    return rows
+
+
 def main(fast: bool = False) -> List[str]:
     recs = load_records()
-    if not recs:
-        return ["roofline_table,0,no_dryrun_records_yet"]
-    lines = []
+    lines = [] if recs else ["roofline_table,0,no_dryrun_records_yet"]
     for r in recs:
         lines.append(
             f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
             f"{r.get('t_compile_s', 0)*1e6:.0f},"
             f"bound={r['bottleneck']};mfu_bound={r['mfu_bound']:.3f};"
             f"fits={((r.get('memory_per_device') or {}).get('fits_16GiB'))}")
+    lines.extend(kernel_rows())
     return lines
 
 

@@ -287,6 +287,68 @@ class AsyncRoundsConfig:
 
 
 @dataclass(frozen=True)
+class CompressionConfig:
+    """Update-path communication compression (``repro.compress``).
+
+    Client updates (the post-optimizer stage deltas uploaded for
+    aggregation) are compressed before they cross the wire and
+    decompressed in front of ``aggregation.aggregate_clients``, so every
+    registry rule runs on the reconstructed updates.  The hot loops
+    (stochastic quantize/dequantize, magnitude-top-k masking) are Pallas
+    TPU kernels (``kernels/compress.py``).
+
+    * ``none`` — bit-for-bit no-op: the compression branch is static, so
+      the round is *identical* to the uncompressed round (golden-tested).
+    * ``topk`` — magnitude top-k sparsification: each client keeps the
+      ``rate`` fraction of largest-|x| coordinates per leaf; the wire
+      carries (value, index) pairs → ~``4 / (8·rate)``× byte reduction.
+    * ``int8`` / ``int4`` — stochastic symmetric quantization at
+      2^(bits-1)-1 levels per client row (per-leaf fp32 scale) → ~4× /
+      ~8× byte reduction.  Both lower to the same "quant" executable:
+      the level count is a *dynamic* scalar (:class:`repro.compress.
+      CompressionParams`), as is the top-k ``rate``, so one compiled
+      round serves every compression level of a scheme kind.
+
+    ``error_feedback`` keeps a per-client residual accumulator
+    (``WSSLState.ef_residual``): e ← (Δ + e) − decompress(compress(Δ + e)),
+    so the quantization/sparsification error is re-sent in later rounds
+    instead of being lost (EF-SGD / EF21 style).
+    """
+
+    scheme: str = "none"          # none | topk | int8 | int4
+    rate: float = 0.05            # topk: kept fraction of coordinates
+    error_feedback: bool = True
+
+    _SCHEMES = ("none", "topk", "int8", "int4")
+
+    def __post_init__(self):
+        if self.scheme not in self._SCHEMES:
+            raise ValueError(f"compression scheme {self.scheme!r} not in "
+                             f"{self._SCHEMES}")
+        if not 0.0 < self.rate <= 1.0:
+            raise ValueError("compression rate must be in (0, 1]")
+
+    @property
+    def enabled(self) -> bool:
+        return self.scheme != "none"
+
+    @property
+    def kind(self) -> str:
+        """The static branch: int8/int4 share one 'quant' executable."""
+        if self.scheme in ("int8", "int4"):
+            return "quant"
+        return self.scheme
+
+    @property
+    def bits(self) -> int:
+        """Wire bits per element (topk/none count full fp32 values)."""
+        return {"int8": 8, "int4": 4}.get(self.scheme, 32)
+
+    def replace(self, **kw) -> "CompressionConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class AggregationConfig:
     """Algorithm 2 step 5 as a pluggable policy block (``core/aggregation.py``).
 
@@ -396,6 +458,10 @@ class WSSLConfig:
     # bounded-staleness async rounds (core/async_round.py); the default
     # deadline=inf block is the synchronous algorithm, bit-for-bit
     async_rounds: AsyncRoundsConfig = AsyncRoundsConfig()
+    # update-path communication compression (repro.compress); the default
+    # scheme="none" block traces no compression op — bit-for-bit the
+    # uncompressed round
+    compression: CompressionConfig = CompressionConfig()
     seed: int = 0
 
     def resolve_aggregation(self) -> AggregationConfig:

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.config import (AsyncRoundsConfig, ModelConfig, TrainConfig,
                           WSSLConfig)
+from repro import compress as compress_mod
 from repro.core import aggregation, wssl
 from repro.core.protocol import sync_round_bytes
 from repro.core.round import (RoundMetrics, WSSLState, _client_stage_bytes,
@@ -131,7 +132,9 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
                      val_batch: Optional[Dict[str, jax.Array]] = None,
                      scenario: Optional["sim_faults.ScenarioParams"] = None,
                      async_p: Optional[AsyncParams] = None,
-                     agg_p: Optional["aggregation.AggParams"] = None, *,
+                     agg_p: Optional["aggregation.AggParams"] = None,
+                     comp_p: Optional["compress_mod.CompressionParams"] = None,
+                     *,
                      model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
                      train_cfg: TrainConfig, schedule,
                      impl: str = "chunked"
@@ -344,6 +347,28 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
 
     agg_stack = jax.tree.map(_deliver, new_cstack, state.client_stack,
                              astate.buffer)
+
+    # ---- update-path compression (repro.compress) -----------------------
+    # compression happens at *delivery*: a stale client's parked raw delta
+    # is compressed the round it lands, so the wire carries compressed
+    # bytes for fresh and stale uploads alike and the staleness discount
+    # (already fused into `contrib`) composes with the reconstruction.
+    # scheme="none" traces no op — the async-off golden stays bit-for-bit.
+    comp_cfg = wssl_cfg.compression
+    ef_residual = state.ef_residual
+    if comp_cfg.enabled:
+        if comp_p is None:
+            comp_p = compress_mod.compression_params(comp_cfg)
+        delta = jax.tree.map(lambda a, b: a.astype(jnp.float32)
+                             - b.astype(jnp.float32),
+                             agg_stack, state.client_stack)
+        sent, ef_residual = compress_mod.apply_compression(
+            delta, ef_residual, contrib, jax.random.fold_in(rng_sel, 0xC09),
+            comp_cfg, comp_p)
+        agg_stack = jax.tree.map(
+            lambda old, s: (old.astype(jnp.float32) + s).astype(old.dtype),
+            state.client_stack, sent)
+
     # registry dispatch (core/aggregation.py): weighted rules fuse the
     # fractional staleness discount into their coefficients; robust rules
     # (trimmed_mean/median/krum/...) binarize membership internally — a
@@ -381,13 +406,24 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
     stage_bytes = jnp.asarray(_client_stage_bytes(state.client_stack, n),
                               jnp.float32)
     bytes_resync = n_evicted * stage_bytes
+    uploads = on_time.sum() + n_arrived
+    update_raw = uploads * stage_bytes
+    if comp_cfg.enabled:
+        comp_stage = compress_mod.compressed_stage_bytes(
+            state.client_stack, n, comp_cfg, comp_p)
+        update_comp = uploads * comp_stage
+        bytes_sync = (uploads * comp_stage + n * stage_bytes + bytes_resync)
+    else:
+        update_comp = update_raw
+        bytes_sync = sync_round_bytes(uploads, n, stage_bytes) + bytes_resync
     metrics = RoundMetrics(
         loss=loss, per_client_loss=pcl * part, val_loss=val_losses,
         mask=part, importance=importance,
         bytes_up=bytes_per_hop.sum(), bytes_down=bytes_per_hop.sum(),
         bytes_per_hop=bytes_per_hop,
-        bytes_sync=sync_round_bytes(on_time.sum() + n_arrived, n,
-                                    stage_bytes) + bytes_resync,
+        bytes_sync=bytes_sync,
+        bytes_update_raw=update_raw,
+        bytes_update_comp=update_comp,
     )
     amet = AsyncRoundMetrics(
         base=metrics,
@@ -403,7 +439,8 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
         client_stack=new_cstack, server_params=new_server,
         edge_stages=new_edges, opt_client=new_opt_c, opt_server=new_opt_s,
         opt_edge=new_opt_e, importance=importance,
-        round_index=state.round_index + 1, rng=rng)
+        round_index=state.round_index + 1, rng=rng,
+        ef_residual=ef_residual)
     new_astate = AsyncState(pending=new_pending, staleness=new_staleness,
                             buffer=new_buffer)
     return new_state, new_astate, amet
@@ -414,10 +451,11 @@ def make_async_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
     """jit-ready async round with static configs closed over.
 
     The returned function takes ``(state, astate, batch, val_batch,
-    scenario_params, async_params, agg_params)`` — all three params
-    pytrees are dynamic, so one compiled executable serves every
-    same-shape latency scenario, every deadline / staleness bound, and
-    every aggregation trim/f/m setting."""
+    scenario_params, async_params, agg_params, comp_params)`` — all four
+    params pytrees are dynamic, so one compiled executable serves every
+    same-shape latency scenario, every deadline / staleness bound, every
+    aggregation trim/f/m setting, and every compression rate / bit
+    width of a scheme kind."""
     from repro.optim.schedule import make_schedule
     schedule = make_schedule(train_cfg.schedule, train_cfg.learning_rate,
                              train_cfg.warmup_steps, train_cfg.rounds)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import Scenario, WSSLConfig
+from repro import compress as compress_mod
 from repro.core import aggregation, protocol, wssl
 from repro.core.split import split_grads
 from repro.data.pipeline import ClientLoader
@@ -189,6 +190,20 @@ def train_wssl(adapter: ModelAdapter,
     client_stage_bytes = protocol.tree_bytes(client0)
     comm = protocol.CommLog()
 
+    # ---- update-path compression (repro.compress), host-side ------------
+    # clients upload decompress(compress(Δ + e)); the aggregation below
+    # then runs on the reconstructed stacks.  scheme="none" leaves every
+    # byte and every update untouched.
+    comp_cfg = wssl_cfg.compression
+    comp_stage_bytes = (protocol.compressed_update_bytes(
+        client0, comp_cfg.scheme, comp_cfg.rate) if comp_cfg.enabled
+        else client_stage_bytes)
+    ef_stack: Any = ()
+    if comp_cfg.enabled and comp_cfg.error_feedback:
+        ef_stack = jax.tree.map(
+            lambda l: jnp.zeros((n,) + l.shape, jnp.float32), client0)
+    comp_rng = jax.random.PRNGKey(7919 * seed + 3)
+
     for r in range(rounds):
         # ---- Algorithm 1: selection (round-0 rule lives in wssl) ------
         # select_staleness_beta > 0: busy (parked) and slow clients pay a
@@ -286,16 +301,25 @@ def train_wssl(adapter: ModelAdapter,
             for i in adaptive_now:
                 clients[i] = jax.tree.map(jnp.copy, crafted)
         resync_bytes = n_evicted * client_stage_bytes
-        sync_bytes = protocol.sync_round_bytes(
-            len(on_time) + len(arrivals), n,
-            client_stage_bytes) + resync_bytes
+        uploads = len(on_time) + len(arrivals)
+        update_raw = uploads * client_stage_bytes
+        update_comp = uploads * comp_stage_bytes
+        if comp_cfg.enabled:
+            # compressed upload from the participants + raw broadcast back
+            sync_bytes = (uploads * comp_stage_bytes
+                          + n * client_stage_bytes + resync_bytes)
+        else:
+            sync_bytes = protocol.sync_round_bytes(
+                uploads, n, client_stage_bytes) + resync_bytes
         mean_stale = (float(np.mean([p[1] for p in arrivals.values()]))
                       if arrivals else 0.0)
         comm.record(r, len(sel), bytes_up=round_bytes // 2,
                     bytes_down=round_bytes // 2, bytes_sync=sync_bytes,
                     bytes_per_hop=(round_bytes // 2,),
                     arrived=len(arrivals), mean_staleness=mean_stale,
-                    buffered=len(late), evicted=n_evicted)
+                    buffered=len(late), evicted=n_evicted,
+                    bytes_update_raw=update_raw,
+                    bytes_update_comp=update_comp)
 
         # ---- validation → importance ----------------------------------
         val_losses = jnp.stack([evaluate(clients[i], server, xv, yv)[0]
@@ -316,6 +340,16 @@ def train_wssl(adapter: ModelAdapter,
             clients[i] = jax.tree.map(lambda g, dl: g + dl, global_prev,
                                       delta)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
+        if comp_cfg.enabled:
+            # the uploaded stage deltas cross the wire compressed; the
+            # server reconstructs global + decompress(compress(Δ + e))
+            delta_stack = jax.tree.map(lambda s, g: s - g[None],
+                                       stacked, global_prev)
+            sent, ef_stack = compress_mod.apply_compression(
+                delta_stack, ef_stack, jnp.asarray(contrib),
+                jax.random.fold_in(comp_rng, r), comp_cfg)
+            stacked = jax.tree.map(lambda g, s: g[None] + s,
+                                   global_prev, sent)
         # registry dispatch (core/aggregation.py) — the same policy layer
         # as the fused rounds, so the paper loop gets every robust rule
         # (trimmed_mean/median/krum/multi_krum) for free

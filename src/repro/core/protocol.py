@@ -22,8 +22,59 @@ import numpy as np
 
 
 def tree_bytes(tree) -> int:
-    return sum(np.asarray(l).size * np.asarray(l).dtype.itemsize
-               for l in jax.tree.leaves(tree))
+    """Total bytes of a pytree's leaves, from shape/dtype *metadata* only.
+
+    Never materializes device arrays (np.asarray on a jax.Array is a
+    device→host copy of the whole tree, once per round) and therefore also
+    accepts abstract leaves — ``jax.ShapeDtypeStruct`` trees cost the same
+    as concrete ones.  Shapeless leaves (python scalars) fall back to a
+    numpy conversion, which for them is free."""
+    total = 0
+    for l in jax.tree.leaves(tree):
+        shape = getattr(l, "shape", None)
+        dtype = getattr(l, "dtype", None)
+        if shape is None or dtype is None:
+            a = np.asarray(l)
+            shape, dtype = a.shape, a.dtype
+        total += int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+    return total
+
+
+def compressed_update_bytes(tree, scheme: str, rate: float = 0.05,
+                            num_clients: int = 1) -> int:
+    """Concrete wire bytes of ONE client's compressed stage upload.
+
+    The host-side mirror of the traced ``repro.compress.
+    compressed_stage_bytes`` — the two must agree exactly (tested).  For a
+    *stacked* tree (leaves (N, ...)) pass ``num_clients=N`` so the per-leaf
+    element count is one client's share.
+
+    * ``none``  — raw: m · itemsize per leaf
+    * ``topk``  — k (fp32 value, int32 index) pairs: 8·k, k = ⌈rate·m⌉
+      clipped to [1, m]
+    * ``int8`` / ``int4`` — m·bits/8 payload + one fp32 scale per leaf
+    """
+    bits = {"int8": 8, "int4": 4}.get(scheme)
+    total = 0.0
+    for l in jax.tree.leaves(tree):
+        shape = getattr(l, "shape", ())
+        dtype = np.dtype(getattr(l, "dtype", np.float32))
+        m = int(np.prod(shape, dtype=np.int64)) // max(num_clients, 1)
+        if m == 0:
+            continue
+        if scheme == "none":
+            total += m * dtype.itemsize
+        elif scheme == "topk":
+            # fp32 round, matching the traced formula bit-for-bit
+            k = min(max(float(np.round(np.float32(rate) * np.float32(m))),
+                        1.0), float(m))
+            total += k * 8.0
+        elif bits is not None:
+            # whole wire bytes per leaf: an odd-m int4 payload pads a nibble
+            total += float(np.ceil(m * bits / 8.0)) + 4.0
+        else:
+            raise ValueError(f"unknown compression scheme {scheme!r}")
+    return int(total)
 
 
 @dataclass
@@ -44,6 +95,11 @@ class RoundComm:
     mean_staleness: float = 0.0
     buffered: int = 0
     evicted: int = 0
+    # update-path compression (repro.compress): raw vs wire bytes of the
+    # client updates uploaded for aggregation this round.  Both zero on
+    # logs that predate compression accounting; equal when scheme="none".
+    bytes_update_raw: int = 0
+    bytes_update_comp: int = 0
 
     @property
     def total(self) -> int:
@@ -58,12 +114,15 @@ class CommLog:
                bytes_down: int, bytes_sync: int = 0,
                bytes_per_hop: Sequence[int] = (), arrived: int = 0,
                mean_staleness: float = 0.0, buffered: int = 0,
-               evicted: int = 0) -> None:
+               evicted: int = 0, bytes_update_raw: int = 0,
+               bytes_update_comp: int = 0) -> None:
         self.rounds.append(RoundComm(round_index, selected, int(bytes_up),
                                      int(bytes_down), int(bytes_sync),
                                      tuple(int(b) for b in bytes_per_hop),
                                      int(arrived), float(mean_staleness),
-                                     int(buffered), int(evicted)))
+                                     int(buffered), int(evicted),
+                                     int(bytes_update_raw),
+                                     int(bytes_update_comp)))
 
     @property
     def total_bytes(self) -> int:
@@ -91,9 +150,19 @@ class CommLog:
             "mean_selected": float(np.mean([r.selected for r in self.rounds])),
         }
         for h in range(self.num_hops):
-            vals = [r.bytes_per_hop[h] for r in self.rounds
-                    if len(r.bytes_per_hop) > h]
+            # normalize over ALL rounds: a round that logged () (resync /
+            # classic single-cut entries in a mixed log) moved zero bytes
+            # across hop h — averaging only the rounds that recorded it
+            # would overstate the per-hop traffic
+            vals = [r.bytes_per_hop[h] if len(r.bytes_per_hop) > h else 0
+                    for r in self.rounds]
             out[f"mean_hop{h}_MB"] = float(np.mean(vals)) / 1e6
+        raw = float(np.sum([r.bytes_update_raw for r in self.rounds]))
+        comp = float(np.sum([r.bytes_update_comp for r in self.rounds]))
+        if comp > 0:
+            out["update_raw_MB"] = raw / 1e6
+            out["update_comp_MB"] = comp / 1e6
+            out["update_compression_ratio"] = raw / comp
         if self.is_async:
             arr = [r.arrived for r in self.rounds]
             out["stale_arrivals"] = float(np.sum(arr))

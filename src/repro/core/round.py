@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig, WSSLConfig
+from repro import compress as compress_mod
 from repro.core import aggregation, wssl
 from repro.core.protocol import sync_round_bytes
 from repro.models import transformer as tf
@@ -50,6 +51,11 @@ class WSSLState(NamedTuple):
     importance: jax.Array         # (N,) normalized
     round_index: jax.Array        # int32
     rng: jax.Array
+    # per-client error-feedback residuals (repro.compress) — the empty
+    # tuple (zero pytree leaves) whenever compression/EF is off, so the
+    # golden leaf-count regression holds and scheme="none" stays
+    # bit-for-bit identical to the pre-compression round
+    ef_residual: Params = ()
 
 
 class RoundMetrics(NamedTuple):
@@ -62,6 +68,10 @@ class RoundMetrics(NamedTuple):
     bytes_down: jax.Array         # total returned-gradient bytes
     bytes_per_hop: jax.Array      # (num_hops,) activation bytes per crossing
     bytes_sync: jax.Array         # client-stage aggregation + broadcast
+    # update-path compression: raw vs wire bytes of this round's uploaded
+    # client updates (equal when compression is off)
+    bytes_update_raw: jax.Array = 0.0
+    bytes_update_comp: jax.Array = 0.0
 
 
 def init_state(rng, model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
@@ -99,6 +109,8 @@ def init_state(rng, model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
         from repro.optim.optimizers import SgdState
         return SgdState(step=(), mom=p_axes)
 
+    comp = wssl_cfg.compression
+    ef = comp.enabled and comp.error_feedback
     state = WSSLState(
         client_stack=client_stack,
         server_params=server,
@@ -109,6 +121,8 @@ def init_state(rng, model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
         importance=jnp.full((n,), 1.0 / n, jnp.float32),
         round_index=jnp.zeros((), jnp.int32),
         rng=jax.random.fold_in(rng, 1),
+        ef_residual=(compress_mod.init_ef_residual(client_stack)
+                     if ef else ()),
     )
     state_axes = WSSLState(
         client_stack=stacked_axes,
@@ -120,6 +134,7 @@ def init_state(rng, model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
         importance=(None,),
         round_index=(),
         rng=(),
+        ef_residual=stacked_axes if ef else (),
     )
     return state, state_axes
 
@@ -184,7 +199,8 @@ def _client_stage_bytes(client_stack: Params, n: int) -> int:
 def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
                val_batch: Optional[Dict[str, jax.Array]] = None,
                scenario: Optional["sim_faults.ScenarioParams"] = None,
-               agg_p: Optional["aggregation.AggParams"] = None, *,
+               agg_p: Optional["aggregation.AggParams"] = None,
+               comp_p: Optional["compress_mod.CompressionParams"] = None, *,
                model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
                train_cfg: TrainConfig, schedule,
                impl: str = "chunked") -> Tuple[WSSLState, RoundMetrics]:
@@ -206,7 +222,14 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
 
     agg_p: optional dynamic AggParams (core/aggregation.py) so one
     executable serves every same-shape trim/f/m setting; None lowers them
-    from the (static) config."""
+    from the (static) config.
+
+    comp_p: optional dynamic CompressionParams (repro.compress) — the
+    top-k rate and quantization level count are traced scalars, so one
+    executable serves every compression *level* of a scheme kind; only the
+    kind itself (none | topk | quant) is a static branch.  With
+    scheme="none" no compression op is traced at all and the round is
+    bit-for-bit the pre-compression round (golden-tested)."""
     n = wssl_cfg.num_clients
     remat = train_cfg.remat
     num_edges = len(state.edge_stages)
@@ -373,10 +396,32 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
         val_losses = jnp.zeros((n,), jnp.float32)
         importance = state.importance
 
+    # ---- update-path compression (repro.compress) -----------------------
+    # the *sent* stage delta is compressed client-side; the server
+    # reconstructs old + decompress(compress(Δ + e)) before aggregation,
+    # so every registry rule runs on the wire-reconstructed updates.  With
+    # scheme="none" this whole block is absent from the trace.
+    comp_cfg = wssl_cfg.compression
+    ef_residual = state.ef_residual
+    if comp_cfg.enabled:
+        if comp_p is None:
+            comp_p = compress_mod.compression_params(comp_cfg)
+        delta = jax.tree.map(lambda a, b: a.astype(jnp.float32)
+                             - b.astype(jnp.float32),
+                             new_cstack, state.client_stack)
+        sent, ef_residual = compress_mod.apply_compression(
+            delta, ef_residual, mask, jax.random.fold_in(rng_sel, 0xC09),
+            comp_cfg, comp_p)
+        agg_stack = jax.tree.map(
+            lambda old, s: (old.astype(jnp.float32) + s).astype(old.dtype),
+            state.client_stack, sent)
+    else:
+        agg_stack = new_cstack
+
     # ---- Algorithm 2 step 5: registry-dispatched aggregation + sync -----
     # (dropout can empty the selection; `safe` falls back to a no-op sync)
     global_client = aggregation.aggregate_clients(
-        new_cstack, importance, mask, wssl_cfg, safe=plan is not None,
+        agg_stack, importance, mask, wssl_cfg, safe=plan is not None,
         params=agg_p)
     new_cstack = wssl.broadcast_global(new_cstack, global_client)
 
@@ -385,18 +430,31 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
     bytes_per_hop = sel * jnp.asarray(hop_bytes, jnp.float32)
     stage_bytes = jnp.asarray(_client_stage_bytes(state.client_stack, n),
                               jnp.float32)
+    update_raw = sel * stage_bytes
+    if comp_cfg.enabled:
+        comp_stage = compress_mod.compressed_stage_bytes(
+            state.client_stack, n, comp_cfg, comp_p)
+        update_comp = sel * comp_stage
+        # sync = compressed upload from the selected + raw broadcast to all
+        bytes_sync = sel * comp_stage + n * stage_bytes
+    else:
+        update_comp = update_raw
+        bytes_sync = sync_round_bytes(sel, n, stage_bytes)
     metrics = RoundMetrics(
         loss=loss, per_client_loss=pcl * mask, val_loss=val_losses,
         mask=mask, importance=importance,
         bytes_up=bytes_per_hop.sum(), bytes_down=bytes_per_hop.sum(),
         bytes_per_hop=bytes_per_hop,
-        bytes_sync=sync_round_bytes(sel, n, stage_bytes),
+        bytes_sync=bytes_sync,
+        bytes_update_raw=update_raw,
+        bytes_update_comp=update_comp,
     )
     new_state = WSSLState(
         client_stack=new_cstack, server_params=new_server,
         edge_stages=new_edges, opt_client=new_opt_c, opt_server=new_opt_s,
         opt_edge=new_opt_e, importance=importance,
-        round_index=state.round_index + 1, rng=rng)
+        round_index=state.round_index + 1, rng=rng,
+        ef_residual=ef_residual)
     return new_state, metrics
 
 

@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import compress as _compress
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rg_lru as _lru
 from repro.kernels import ssd_scan as _ssd
@@ -51,9 +52,35 @@ def rg_lru_scan(log_a, b, *, chunk: int = 128, block_w: int = 512):
 
 def weighted_average(stacked: jax.Array, weights: jax.Array,
                      *, block_m: int = 2048) -> jax.Array:
-    """Any-rank stacked leaf (N, ...) -> (...)."""
+    """Any-rank stacked leaf (N, ...) -> (...).  Empty leaves (zero-size
+    trailing shape) short-circuit: nothing to reduce, and the kernel's grid
+    math cannot divide by a zero block."""
     n = stacked.shape[0]
     flat = stacked.reshape(n, -1)
+    if flat.shape[1] == 0:
+        return jnp.zeros(stacked.shape[1:], stacked.dtype)
     out = _wavg.weighted_average_2d(flat, weights, block_m=block_m,
                                     interpret=not _on_tpu())
     return out.reshape(stacked.shape[1:])
+
+
+def quantize_stochastic(x: jax.Array, u: jax.Array, inv_step: jax.Array,
+                        levels, *, block_m: int = 2048) -> jax.Array:
+    """(N, M) fp -> (N, M) int8 codes in [-levels, levels]."""
+    return _compress.quantize_stochastic_2d(x, u, inv_step, levels,
+                                            block_m=block_m,
+                                            interpret=not _on_tpu())
+
+
+def dequantize(q: jax.Array, step: jax.Array,
+               *, block_m: int = 2048) -> jax.Array:
+    """(N, M) int8 codes -> (N, M) fp32 reconstruction."""
+    return _compress.dequantize_2d(q, step, block_m=block_m,
+                                   interpret=not _on_tpu())
+
+
+def topk_mask(x: jax.Array, thresh: jax.Array,
+              *, block_m: int = 2048) -> jax.Array:
+    """(N, M) fp -> same with |x| < per-row threshold zeroed."""
+    return _compress.topk_mask_2d(x, thresh, block_m=block_m,
+                                  interpret=not _on_tpu())

@@ -77,3 +77,25 @@ def rg_lru_scan(log_a: jax.Array, b: jax.Array) -> jax.Array:
 def weighted_average_2d(stacked: jax.Array, weights: jax.Array) -> jax.Array:
     return (weights.astype(jnp.float32) @ stacked.astype(jnp.float32)
             ).astype(stacked.dtype)
+
+
+def quantize_stochastic_2d(x: jax.Array, u: jax.Array, inv_step: jax.Array,
+                           levels) -> jax.Array:
+    """Stochastic symmetric quantization oracle (kernels/compress.py).
+    x, u: (N, M); inv_step: (N,) = levels/scale -> int8 codes."""
+    lv = jnp.asarray(levels, jnp.float32)
+    q = jnp.floor(x.astype(jnp.float32) * inv_step.astype(jnp.float32)[:, None]
+                  + u.astype(jnp.float32))
+    return jnp.clip(q, -lv, lv).astype(jnp.int8)
+
+
+def dequantize_2d(q: jax.Array, step: jax.Array) -> jax.Array:
+    """q: (N, M) int8 codes; step: (N,) = scale/levels -> fp32."""
+    return q.astype(jnp.float32) * step.astype(jnp.float32)[:, None]
+
+
+def topk_mask_2d(x: jax.Array, thresh: jax.Array) -> jax.Array:
+    """Zero every entry whose magnitude is below the per-row threshold."""
+    xf = x.astype(jnp.float32)
+    return jnp.where(jnp.abs(xf) >= thresh.astype(jnp.float32)[:, None],
+                     xf, jnp.zeros_like(xf)).astype(x.dtype)

@@ -32,6 +32,10 @@ def weighted_average_2d(stacked: jax.Array, weights: jax.Array, *,
                         interpret: bool = False) -> jax.Array:
     """stacked: (N, M) -> (M,)."""
     n, m = stacked.shape
+    if m == 0:
+        # degenerate empty leaf: block_m = min(block_m, 0) would divide the
+        # grid by zero — there is nothing to reduce, return the empty row
+        return jnp.zeros((0,), stacked.dtype)
     block_m = min(block_m, m)
     pad = (-m) % block_m
     if pad:

@@ -148,6 +148,22 @@ def test_wavg_parity_vs_wssl_reference(n, m, bm):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+def test_wavg_empty_leaf():
+    """m == 0 must not reach the kernel grid (division by zero): an empty
+    leaf aggregates to an empty result, through both the 2-D entry point
+    and the pytree wrapper in ops.weighted_average."""
+    from repro.kernels import ops
+    w = jnp.asarray([0.5, 0.5], jnp.float32)
+    out = weighted_average_2d(jnp.zeros((2, 0), jnp.float32), w,
+                              interpret=True)
+    assert out.shape == (0,)
+    got = ops.weighted_average(jnp.zeros((2, 0, 5), jnp.float32), w)
+    assert got.shape == (0, 5)
+    full = _rand((2, 3))
+    np.testing.assert_allclose(np.asarray(ops.weighted_average(full, w)),
+                               np.asarray(full).mean(0), atol=1e-6)
+
+
 def test_wavg_matches_tree_aggregation():
     """ops.weighted_average == core.wssl.weighted_average on a pytree."""
     from repro.core import wssl

@@ -1,0 +1,124 @@
+"""Communication accounting (core/protocol.py): tree_bytes must stay
+metadata-only (no device→host copies), CommLog.summary must normalize
+per-hop means over mixed logs, and the compressed-update byte formulas
+must match the wire format."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import protocol
+
+
+class _NoMaterialize:
+    """A leaf whose shape/dtype are readable but whose array conversion
+    raises — the regression guard for tree_bytes doing np.asarray on
+    device arrays (a whole-tree device→host copy, once per round)."""
+
+    def __init__(self, shape, dtype):
+        self.shape = shape
+        self.dtype = np.dtype(dtype)
+
+    def __array__(self, *a, **k):
+        raise AssertionError("tree_bytes materialized a leaf")
+
+
+# ---------------------------------------------------------------------------
+# tree_bytes: metadata only
+# ---------------------------------------------------------------------------
+
+def test_tree_bytes_never_materializes():
+    tree = {"w": _NoMaterialize((8, 16), np.float32),
+            "b": _NoMaterialize((16,), np.float16)}
+    assert protocol.tree_bytes(tree) == 8 * 16 * 4 + 16 * 2
+
+
+def test_tree_bytes_accepts_abstract_leaves():
+    tree = {"w": jax.ShapeDtypeStruct((3, 5), jnp.bfloat16),
+            "b": jax.ShapeDtypeStruct((5,), jnp.float32)}
+    assert protocol.tree_bytes(tree) == 3 * 5 * 2 + 5 * 4
+
+
+def test_tree_bytes_matches_concrete_and_scalars():
+    concrete = {"w": jnp.ones((4, 4), jnp.float32), "n": 3}
+    abstract = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32), "n": 3}
+    got = protocol.tree_bytes(concrete)
+    assert got == protocol.tree_bytes(abstract)
+    assert got == 4 * 4 * 4 + np.asarray(3).itemsize
+
+
+def test_tree_bytes_empty_tree():
+    assert protocol.tree_bytes(()) == 0
+    assert protocol.tree_bytes({"e": jnp.zeros((0, 5))}) == 0
+
+
+# ---------------------------------------------------------------------------
+# CommLog.summary: mixed-log hop normalization
+# ---------------------------------------------------------------------------
+
+def test_summary_hop_means_normalize_over_all_rounds():
+    """Rounds that logged bytes_per_hop=() (resync entries, classic
+    single-cut rows in a mixed log) moved zero bytes across every hop;
+    the per-hop mean must average over ALL rounds, not just the rows that
+    recorded that hop."""
+    log = protocol.CommLog()
+    log.record(0, 2, 100, 100, bytes_per_hop=(600, 400))
+    log.record(1, 2, 100, 100)                       # untracked round
+    log.record(2, 2, 100, 100, bytes_per_hop=(200,))  # shorter hop row
+    s = log.summary()
+    assert s["mean_hop0_MB"] == pytest.approx((600 + 0 + 200) / 3 / 1e6)
+    assert s["mean_hop1_MB"] == pytest.approx((400 + 0 + 0) / 3 / 1e6)
+    assert log.num_hops == 2
+
+
+def test_summary_compression_columns():
+    log = protocol.CommLog()
+    log.record(0, 2, 10, 10, bytes_update_raw=4000, bytes_update_comp=400)
+    log.record(1, 2, 10, 10, bytes_update_raw=4000, bytes_update_comp=400)
+    s = log.summary()
+    assert s["update_raw_MB"] == pytest.approx(8000 / 1e6)
+    assert s["update_comp_MB"] == pytest.approx(800 / 1e6)
+    assert s["update_compression_ratio"] == pytest.approx(10.0)
+    # uncompressed logs (comp == 0) don't grow the columns
+    assert "update_compression_ratio" not in protocol.CommLog().summary() \
+        if not protocol.CommLog().rounds else True
+    bare = protocol.CommLog()
+    bare.record(0, 2, 10, 10)
+    assert "update_compression_ratio" not in bare.summary()
+
+
+# ---------------------------------------------------------------------------
+# compressed_update_bytes: wire-format formulas
+# ---------------------------------------------------------------------------
+
+def test_compressed_update_bytes_formulas():
+    tree = {"w": jax.ShapeDtypeStruct((100,), jnp.float32),
+            "b": jax.ShapeDtypeStruct((33,), jnp.float32)}
+    raw = protocol.tree_bytes(tree)
+    assert protocol.compressed_update_bytes(tree, "none") == raw
+    # topk: k = round(rate·m) clipped to [1, m], 8 bytes per kept coord
+    assert protocol.compressed_update_bytes(tree, "topk", rate=0.05) \
+        == 5 * 8 + 2 * 8
+    # rate small enough that k clips up to 1
+    assert protocol.compressed_update_bytes(tree, "topk", rate=1e-6) \
+        == 8 + 8
+    # int8: m bytes payload + 4-byte scale per leaf
+    assert protocol.compressed_update_bytes(tree, "int8") \
+        == (100 + 4) + (33 + 4)
+    # int4: whole wire bytes — the odd-m leaf pads a nibble
+    assert protocol.compressed_update_bytes(tree, "int4") \
+        == (50 + 4) + (17 + 4)
+
+
+def test_compressed_update_bytes_stacked_and_errors():
+    stacked = {"w": jax.ShapeDtypeStruct((4, 10), jnp.float32)}
+    per_client = {"w": jax.ShapeDtypeStruct((10,), jnp.float32)}
+    assert protocol.compressed_update_bytes(stacked, "int8", num_clients=4) \
+        == protocol.compressed_update_bytes(per_client, "int8")
+    with pytest.raises(ValueError):
+        protocol.compressed_update_bytes(per_client, "gzip")
+    # empty leaves cost nothing under every scheme
+    empty = {"e": jax.ShapeDtypeStruct((0, 7), jnp.float32)}
+    for scheme in ("none", "topk", "int8", "int4"):
+        assert protocol.compressed_update_bytes(empty, scheme) == 0
