@@ -56,8 +56,28 @@ Dirichlet label partition (--paper mode, via partition_for_scenario).
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+
+def _maybe_force_host_devices() -> None:
+    """--shards N on a CPU-only host needs N XLA devices, and XLA reads
+    the flag once at backend init — so peek at argv before importing jax.
+    An explicit XLA_FLAGS wins (CI pins 8 there); accelerator platforms
+    ignore the host-platform count entirely."""
+    if "--shards" not in sys.argv or os.environ.get("XLA_FLAGS"):
+        return
+    try:
+        k = int(sys.argv[sys.argv.index("--shards") + 1])
+    except (ValueError, IndexError):
+        return
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={max(k, 1)}")
+
+
+_maybe_force_host_devices()
 
 import jax
 import jax.numpy as jnp
@@ -65,13 +85,14 @@ import numpy as np
 
 from repro.compress import compression_params
 from repro.config import (AggregationConfig, AsyncRoundsConfig,
-                          CompressionConfig, Scenario, TrainConfig,
-                          WSSLConfig, get_arch, reduced)
+                          CompressionConfig, ModelConfig, Scenario,
+                          TrainConfig, WSSLConfig, get_arch, reduced)
 from repro.core import fairness, protocol
 from repro.core.aggregation import agg_params, list_aggregators
-from repro.core.async_round import (async_params, init_async_state,
-                                    make_async_round_fn)
-from repro.core.round import init_state, make_round_fn
+from repro.core.async_round import (DeadlineController, async_params,
+                                    init_async_state, make_async_round_fn,
+                                    make_sharded_async_round_fn)
+from repro.core.round import init_state, make_round_fn, make_sharded_round_fn
 from repro.data.synthetic import lm_batch, make_token_stream
 from repro.sim import get_scenario, list_scenarios, scenario_params
 
@@ -500,6 +521,172 @@ def run_async(args) -> int:
     return 0 if ok and gap < 0 else 1
 
 
+def _scale_batch(vocab: int, n: int, b: int, s: int, r: int) -> dict:
+    """Per-client-distinct tokens without the per-client Python loop of
+    ``_mk_batch`` (1k–10k streams per round would dominate host time):
+    one vectorized draw reshaped onto the client axis."""
+    d = lm_batch(n * b, s, vocab, seed=r)
+    return {"tokens": jnp.asarray(d["tokens"]).reshape(n, b, s),
+            "labels": jnp.asarray(d["labels"]).reshape(n, b, s)}
+
+
+def run_scale(args) -> int:
+    """Client-axis scale-out sweep (``--shards N``): the shard_map round
+    (core/round.py::make_sharded_round_fn) over a client ladder at fixed
+    shard count, emitting round-time and bytes/hop curves to
+    ``--bench-out`` (BENCH_scale.json).
+
+    The headline column is ``bytes_cross_shard``: with a decomposable
+    rule (importance/uniform) the aggregation tree crosses shard
+    boundaries with 2·S·|θ| bytes — CONSTANT up the client ladder — while
+    the flat sync traffic (``bytes_update_raw``) grows O(n·|θ|).  Exit
+    checks: one compiled executable per ladder point (all knobs dynamic),
+    cross-shard bytes flat across the ladder, and cross < raw at the top.
+
+    ``--staleness-target T`` switches to the sharded bounded-staleness
+    round with a host-side :class:`DeadlineController` retuning
+    ``AsyncParams.deadline`` every round toward a mean-staleness budget
+    of T — zero recompiles, logged as deadline/staleness trajectories.
+
+      PYTHONPATH=src python benchmarks/robustness.py \\
+          --clients 1024 --shards 8 --smoke
+      PYTHONPATH=src python benchmarks/robustness.py --reduced \\
+          --clients 10000 --shards 8 --staleness-target 1.0
+    """
+    from repro.core.aggregation import rule_decomposes
+    from repro.data.partition import partition_for_scenario
+    from repro.launch.mesh import make_client_mesh
+
+    sc = get_scenario(args.scenario or "noniid-1k")
+    sp = scenario_params(sc)
+    shards = args.shards
+    n_top = args.clients or sc.num_clients_hint or 1024
+    if args.smoke:
+        # purpose-built tiny stage: the reduced archs still stack ~MBs of
+        # client params per client, too big × 1024 for a CI smoke
+        cfg = ModelConfig(name="scale-smoke", vocab_size=64, d_model=32,
+                          num_layers=2, num_heads=2, num_kv_heads=2,
+                          d_ff=64)
+        b, s = 1, 16
+        rounds = min(args.rounds, 3)
+    else:
+        cfg, _ = _resolve_model_and_cuts(args)
+        b, s = args.batch, args.seq
+        rounds = args.rounds
+    ladder = sorted({max(shards, n_top // k // shards * shards)
+                     for k in (4, 2, 1)})
+    t = TrainConfig(remat=False, learning_rate=3e-3, warmup_steps=0,
+                    schedule="constant")
+    mesh = make_client_mesh(shards)
+    print(f"mesh: {tuple(mesh.shape.items())}; ladder: {ladder}; "
+          f"scenario: {sc.name}; model: {cfg.name}")
+
+    vd = lm_batch(4, s, cfg.vocab_size, seed=999)
+    val = {"tokens": jnp.asarray(vd["tokens"]),
+           "labels": jnp.asarray(vd["labels"])}
+    acfg = AsyncRoundsConfig(deadline=1.0,
+                             max_staleness=args.max_staleness,
+                             staleness_weighting=args.staleness_weighting)
+
+    points = []
+    print(f"{'clients':>8s} {'rd_ms':>8s} {'cross_MB':>9s} {'intra_MB':>9s} "
+          f"{'raw_MB':>9s} {'part_ms':>8s} {'exec':>5s}")
+    for n in ladder:
+        w = WSSLConfig(num_clients=n, participation_fraction=1.0,
+                       importance_temp=0.1, importance_ema=0.8,
+                       async_rounds=acfg)
+        state, _ = init_state(jax.random.PRNGKey(args.seed), cfg, w, t)
+        ctrl, astate = None, None
+        if args.staleness_target is not None:
+            rf = make_sharded_async_round_fn(cfg, w, t, mesh, impl="dense")
+            ctrl = DeadlineController(args.staleness_target)
+            astate = rf.place_astate(init_async_state(state))
+        else:
+            rf = make_sharded_round_fn(cfg, w, t, mesh, impl="dense")
+        state = rf.place_state(state)
+
+        # partition scaling probe: the Dirichlet floor rebalance must stay
+        # O(n log n) at fleet size (it used to rescan donors per deficit)
+        lab = np.random.default_rng(args.seed).integers(
+            0, 10, max(60_000, 8 * n))
+        t0 = time.time()
+        partition_for_scenario(lab, n, sc, seed=args.seed)
+        part_ms = (time.time() - t0) * 1e3
+
+        deadlines, staleness = [], []
+
+        def step(state, astate, r):
+            batch = rf.place_batch(_scale_batch(cfg.vocab_size, n, b, s, r))
+            if ctrl is not None:
+                ap = ctrl.params(acfg, n)
+                state, astate, am = rf(state, astate, batch, val, sp, ap)
+                # an evicted client is a staleness observation too — it
+                # would have arrived at >= max_staleness; without this a
+                # deadline so tight that everything is evicted never
+                # produces an arrival and the controller would stall
+                arr, ev = float(am.arrived), float(am.evicted)
+                obs = float(am.mean_staleness)
+                if ev > 0:
+                    obs = (obs * arr + args.max_staleness * ev) / (arr + ev)
+                ctrl.update(obs, arr + ev)
+                deadlines.append(ctrl.deadline)
+                staleness.append(float(am.mean_staleness))
+                return state, astate, am.base
+            state, m = rf(state, batch, val, sp)
+            return state, astate, m
+
+        # warm-up round compiles; the timed rounds must reuse that trace
+        state, astate, m = step(state, astate, 0)
+        jax.tree.map(lambda x: x.block_until_ready(), m)
+        t0 = time.time()
+        for r in range(1, rounds + 1):
+            state, astate, m = step(state, astate, r)
+        jax.tree.map(lambda x: x.block_until_ready(), m)
+        ms = (time.time() - t0) * 1e3 / rounds
+        execs = rf.cache_size()
+        pt = {"clients": n, "shards": shards, "round_ms": ms,
+              "partition_ms": part_ms, "executables": execs,
+              "bytes_cross_shard": float(m.bytes_cross_shard),
+              "bytes_intra_shard": float(m.bytes_intra_shard),
+              "bytes_update_raw": float(m.bytes_update_raw),
+              "bytes_sync": float(m.bytes_sync),
+              "bytes_per_hop": np.asarray(m.bytes_per_hop).tolist()}
+        if ctrl is not None:
+            pt["deadline_trajectory"] = deadlines
+            pt["staleness_trajectory"] = staleness
+        points.append(pt)
+        print(f"{n:>8d} {ms:8.1f} {pt['bytes_cross_shard'] / 1e6:9.3f} "
+              f"{pt['bytes_intra_shard'] / 1e6:9.3f} "
+              f"{pt['bytes_update_raw'] / 1e6:9.3f} {part_ms:8.1f} "
+              f"{execs:>5d}")
+
+    decomposes = rule_decomposes(WSSLConfig(num_clients=shards))
+    out = {"mesh_shards": shards, "model": cfg.name, "scenario": sc.name,
+           "rounds_per_point": rounds,
+           "aggregation_decomposes": decomposes,
+           "staleness_target": args.staleness_target, "points": points}
+    with open(args.bench_out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nwrote {args.bench_out}")
+
+    ok = all(p["executables"] == 1 for p in points)
+    if not ok:
+        print("FAIL: a ladder point recompiled — a knob leaked into the "
+              "trace as a static")
+    cross = [p["bytes_cross_shard"] for p in points]
+    if decomposes and len(points) > 1:
+        flat = max(cross) - min(cross) < 1e-3
+        top = points[-1]
+        wins = top["bytes_cross_shard"] < top["bytes_update_raw"]
+        print(f"cross-shard bytes across the ladder: "
+              f"{[round(c) for c in cross]} "
+              f"({'flat — O(shards), not O(clients)' if flat else 'NOT flat'})"
+              f"; top point cross/raw = "
+              f"{top['bytes_cross_shard'] / max(top['bytes_update_raw'], 1):.3f}")
+        ok = ok and flat and wins
+    return 0 if ok else 1
+
+
 def run_paper(args) -> int:
     """Paper-scale gait experiment under scenarios (host-side faults)."""
     from repro.configs.wssl_paper import GaitConfig
@@ -549,8 +736,23 @@ def main(argv=None) -> int:
     p.add_argument("--scenario", default=None, choices=list_scenarios(),
                    help="one scenario (default: sweep the registry)")
     p.add_argument("--arch", default="gemma-2b", help="fused mode only")
-    p.add_argument("--clients", type=int, default=4)
+    p.add_argument("--clients", type=int, default=None,
+                   help="client count (default: the scenario's "
+                        "num_clients_hint, else 4; scale mode defaults to "
+                        "the noniid-1k hint of 1024)")
     p.add_argument("--rounds", type=int, default=6)
+    p.add_argument("--shards", type=int, default=None,
+                   help="scale mode: shard the client axis over this many "
+                        "devices (shard_map) and sweep a client ladder; "
+                        "on a CPU host the XLA device count is forced "
+                        "before jax init")
+    p.add_argument("--smoke", action="store_true",
+                   help="scale mode: tiny model + 3 rounds (CI)")
+    p.add_argument("--staleness-target", type=float, default=None,
+                   help="scale mode: sharded async round with an adaptive "
+                        "deadline tuned to this mean-staleness budget")
+    p.add_argument("--bench-out", default="BENCH_scale.json",
+                   help="scale mode: output JSON path")
     p.add_argument("--batch", type=int, default=8, help="fused mode only")
     p.add_argument("--seq", type=int, default=32, help="fused mode only")
     p.add_argument("--seed", type=int, default=0)
@@ -588,6 +790,12 @@ def main(argv=None) -> int:
     p.add_argument("--paper", action="store_true",
                    help="paper-scale gait loop instead of the fused round")
     args = p.parse_args(argv)
+    if args.shards is not None:
+        return run_scale(args)
+    if args.clients is None:
+        hint = (get_scenario(args.scenario).num_clients_hint
+                if args.scenario else None)
+        args.clients = hint or 4
     if args.paper:
         return run_paper(args)
     if args.aggregator is not None:

@@ -173,7 +173,10 @@ def compressed_stage_bytes(client_stack: Params, n: int,
     kind = cfg.kind
     total = jnp.zeros((), jnp.float32)
     for l in jax.tree.leaves(client_stack):
-        m = l.size // n
+        # per-client elements from the leaf's own leading axis, NOT from
+        # ``n``: in the sharded round the stack holds n/shards clients
+        # while ``n`` stays global, and bytes are per client either way
+        m = l.size // l.shape[0]
         if m == 0:
             continue
         if kind == "none":
@@ -184,3 +187,43 @@ def compressed_stage_bytes(client_stack: Params, n: int,
         else:   # quant — whole wire bytes (odd-m int4 pads a nibble)
             total = total + jnp.ceil(m * params.bits / 8.0) + 4.0
     return total
+
+
+def compress_activations(a: jax.Array, rng: jax.Array,
+                         cfg: CompressionConfig,
+                         params: Optional[CompressionParams] = None
+                         ) -> jax.Array:
+    """Wire reconstruction of an activation tensor crossing a split hop.
+
+    ``a`` is any (..., d) activation (or activation-cotangent — the round
+    chains this into its manual vjp relay, which makes the backward pass
+    the straight-through estimate of the compressed forward).  Rows are
+    the flattened leading dims: each d-vector is compressed independently
+    with the same scheme/params as the update path.  No error feedback —
+    activations are transient, there is nothing to accumulate into."""
+    if params is None:
+        params = compression_params(cfg)
+    if cfg.kind == "none":
+        return a
+    d = a.shape[-1]
+    if d == 0 or a.size == 0:
+        return a
+    x2 = a.reshape(-1, d).astype(jnp.float32)
+    rec = _compress_leaf(x2, rng, cfg.kind, params)
+    return rec.reshape(a.shape).astype(a.dtype)
+
+
+def activation_wire_bytes(rows: int, d: int, cfg: CompressionConfig,
+                          params: Optional[CompressionParams] = None):
+    """Traced wire bytes of ONE client's compressed activation crossing a
+    hop: ``rows`` d-vectors (rows = per-client batch·seq).  Mirrors the
+    per-row wire format of :func:`compressed_stage_bytes`."""
+    if params is None:
+        params = compression_params(cfg)
+    kind = cfg.kind
+    if kind == "none":
+        return jnp.asarray(rows * d * 4.0, jnp.float32)
+    if kind == "topk":
+        k = jnp.clip(jnp.round(params.rate * d), 1.0, float(d))
+        return rows * k * 8.0
+    return rows * (jnp.ceil(d * params.bits / 8.0) + 4.0)   # quant

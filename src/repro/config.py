@@ -318,6 +318,11 @@ class CompressionConfig:
     scheme: str = "none"          # none | topk | int8 | int4
     rate: float = 0.05            # topk: kept fraction of coordinates
     error_feedback: bool = True
+    # also compress the per-hop activation crossings (split-hop uplink and
+    # the gradient downlink) with the same scheme; the round then logs raw
+    # vs wire activation bytes as separate CommLog columns.  Off = the
+    # activation path traces nothing (bit-for-bit the uncompressed round).
+    activations: bool = False
 
     _SCHEMES = ("none", "topk", "int8", "int4")
 
@@ -572,6 +577,10 @@ class Scenario:
     # partition-time label skew (Dirichlet alpha); None = stratified/IID.
     skew_alpha: Optional[float] = None
     seed: int = 0
+    # population-size hint: the client count the preset is calibrated for
+    # (scale presets like noniid-1k).  Purely advisory — rounds always run
+    # at WSSLConfig.num_clients; benchmarks default --clients to this.
+    num_clients_hint: Optional[int] = None
 
     # -- deterministic cohorts ----------------------------------------------
     @staticmethod

@@ -102,6 +102,14 @@ class Aggregator:
     # into the mean); False: unweighted robust statistic, fractional mask
     # entries gate membership only.
     weighted: bool
+    # True: the rule is a masked weighted sum with *globally* computable
+    # coefficients, so it splits into per-shard partial sums combined by a
+    # psum tree — cross-shard traffic O(shards·|θ|).  False: the rule
+    # needs the full client axis at once (coordinate sort, pairwise
+    # distance matrix, Weiszfeld geometry) and the sharded round falls
+    # back to an explicit all_gather — cross-shard traffic O(sel·|θ|),
+    # documented in docs/scaling.md.
+    decomposes: bool = False
     doc: str = ""
 
 
@@ -109,6 +117,7 @@ _AGGREGATORS: Dict[str, Aggregator] = {}
 
 
 def register_aggregator(name: str, *, weighted: bool = False,
+                        decomposes: bool = False,
                         doc: str = "") -> Callable[[AggregatorFn],
                                                    AggregatorFn]:
     """Register ``fn(stacked, importance, mask, params, *, safe,
@@ -116,6 +125,7 @@ def register_aggregator(name: str, *, weighted: bool = False,
     ones (user rules can shadow built-ins)."""
     def deco(fn: AggregatorFn) -> AggregatorFn:
         _AGGREGATORS[name] = Aggregator(name=name, fn=fn, weighted=weighted,
+                                        decomposes=decomposes,
                                         doc=doc or (fn.__doc__ or ""))
         return fn
     return deco
@@ -369,7 +379,7 @@ def _mean_rule(stacked, importance, mask, *, use_importance, safe,
     return wssl.weighted_average(stacked, coefs, use_kernel=use_kernel)
 
 
-@register_aggregator("importance", weighted=True,
+@register_aggregator("importance", weighted=True, decomposes=True,
                      doc="importance-weighted mean (the paper's rule)")
 def _importance_rule(stacked, importance, mask, params, *, safe=False,
                      use_kernel=False):
@@ -377,7 +387,7 @@ def _importance_rule(stacked, importance, mask, params, *, safe=False,
                       safe=safe, use_kernel=use_kernel)
 
 
-@register_aggregator("uniform", weighted=True,
+@register_aggregator("uniform", weighted=True, decomposes=True,
                      doc="unweighted mean over the participation mask")
 def _uniform_rule(stacked, importance, mask, params, *, safe=False,
                   use_kernel=False):
@@ -454,3 +464,116 @@ def aggregate_clients(stacked: Params, importance: jax.Array,
     p = agg_params(acfg) if params is None else params
     return agg.fn(stacked, importance, mask, p, safe=safe,
                   use_kernel=use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (two-level) aggregation — the client-sharded round
+# ---------------------------------------------------------------------------
+#
+# With the client axis sharded over a mesh (core/round.py::
+# make_sharded_round_fn), aggregation becomes a tree: each shard (= edge
+# aggregator) reduces its local clients to ONE partial stage, and the
+# partials combine across shards.  For decomposable rules the combine is a
+# psum (XLA lowers it to a recursive-halving/ring tree, O(log S) depth) of
+# the *unnormalized* partial weighted sums with globally-normalized
+# coefficients, so only O(shards·|θ|) bytes ever cross shards.  Rules that
+# need the whole client axis at once (coordinate sorts, Krum's pairwise
+# matrix, Weiszfeld) all_gather the local stacks and run the flat rule
+# unchanged — an explicit, accounted fallback, not a silent one.
+
+
+def rule_decomposes(cfg: WSSLConfig) -> bool:
+    """True when the configured rule partial-aggregates per shard."""
+    return get_aggregator(cfg.resolve_aggregation().rule).decomposes
+
+
+def partial_weighted_sum(stacked: Params, coefs: jax.Array) -> Params:
+    """Unnormalized Σᵢ wᵢ θᵢ over the (local) client axis — one shard's
+    partial aggregate.  ``coefs`` must already carry the *global*
+    normalization; the cross-shard psum then completes the mean exactly."""
+    def one(a):
+        w = coefs.astype(jnp.float32)
+        flat = a.reshape(a.shape[0], -1).astype(jnp.float32)
+        return (w @ flat).reshape(a.shape[1:])
+
+    return jax.tree.map(one, stacked)
+
+
+def shard_aggregate_clients(stacked: Params, importance: jax.Array,
+                            mask: jax.Array, cfg: WSSLConfig, *,
+                            axis_name, shard_index, num_shards: int,
+                            safe: bool = False,
+                            params: Optional[AggParams] = None) -> Params:
+    """Algorithm 2 step 5 inside a client-sharded shard_map body.
+
+    ``stacked`` leaves are LOCAL (N/S, ...); ``importance`` and ``mask``
+    are the full (N,) vectors (they are replicated — every shard computes
+    the selection identically from the replicated rng).  Returns the
+    global stage, replicated across shards.
+
+    Decomposable rules: coefficients are normalized against the global
+    mask (bit-identical to the flat rule's), sliced to the shard, partial
+    weighted sum, psum.  The result differs from the flat rule only by
+    fp32 reassociation of the client sum (documented tolerance).
+    Everything else: all_gather(local stacks) → flat rule verbatim."""
+    acfg = cfg.resolve_aggregation()
+    agg = get_aggregator(acfg.rule)
+    p = agg_params(acfg) if params is None else params
+    n_loc = jax.tree.leaves(stacked)[0].shape[0]
+    if agg.decomposes:
+        coef_fn = (wssl.safe_mean_coefficients if safe
+                   else wssl.mean_coefficients)
+        coefs = coef_fn(importance, mask,
+                        use_importance=acfg.rule == "importance")
+        loc = jax.lax.dynamic_slice_in_dim(coefs, shard_index * n_loc,
+                                           n_loc)
+        part = partial_weighted_sum(stacked, loc)
+        total = jax.lax.psum(part, axis_name)
+        return jax.tree.map(lambda t, a: t.astype(a.dtype), total, stacked)
+    full = jax.tree.map(
+        lambda a: jax.lax.all_gather(a, axis_name, axis=0, tiled=True),
+        stacked)
+    return agg.fn(full, importance, mask, p, safe=safe, use_kernel=False)
+
+
+def tree_aggregate(stacked: Params, importance: jax.Array, mask: jax.Array,
+                   cfg: WSSLConfig, *, num_shards: int, safe: bool = False,
+                   params: Optional[AggParams] = None) -> Params:
+    """Host-side reference of the two-level aggregation tree (no mesh).
+
+    Splits the client axis into ``num_shards`` contiguous groups (client i
+    belongs to shard i // (N/S) — the same layout shard_map induces),
+    partial-aggregates each group, and combines the partials pairwise in a
+    binary tree (the O(log S) shape psum lowers to).  For decomposable
+    rules this equals :func:`aggregate_clients` up to fp32 reassociation;
+    for every other rule the "tree" is the documented all-gather fallback
+    and the result is the flat rule exactly (tested either way in
+    tests/test_sharded_round.py)."""
+    acfg = cfg.resolve_aggregation()
+    agg = get_aggregator(acfg.rule)
+    p = agg_params(acfg) if params is None else params
+    if not agg.decomposes:
+        return agg.fn(stacked, importance, mask, p, safe=safe,
+                      use_kernel=False)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    if n % num_shards != 0:
+        raise ValueError(f"tree_aggregate: {n} clients do not divide into "
+                         f"{num_shards} shards")
+    n_loc = n // num_shards
+    coef_fn = (wssl.safe_mean_coefficients if safe
+               else wssl.mean_coefficients)
+    coefs = coef_fn(importance, mask,
+                    use_importance=acfg.rule == "importance")
+    partials = [
+        partial_weighted_sum(
+            jax.tree.map(lambda a: a[s * n_loc:(s + 1) * n_loc], stacked),
+            coefs[s * n_loc:(s + 1) * n_loc])
+        for s in range(num_shards)
+    ]
+    while len(partials) > 1:               # binary combine tree
+        nxt = [jax.tree.map(jnp.add, partials[i], partials[i + 1])
+               if i + 1 < len(partials) else partials[i]
+               for i in range(0, len(partials), 2)]
+        partials = nxt
+    return jax.tree.map(lambda t, a: t.astype(a.dtype), partials[0],
+                        stacked)

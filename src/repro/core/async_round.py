@@ -40,6 +40,7 @@ amplification (``byz_scale``) still applies to whatever they send.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -49,9 +50,10 @@ from repro.config import (AsyncRoundsConfig, ModelConfig, TrainConfig,
                           WSSLConfig)
 from repro import compress as compress_mod
 from repro.core import aggregation, wssl
-from repro.core.protocol import sync_round_bytes
-from repro.core.round import (RoundMetrics, WSSLState, _client_stage_bytes,
-                              _client_vmap, _per_client_losses)
+from repro.core.protocol import hierarchical_sync_bytes, sync_round_bytes
+from repro.core.round import (RoundMetrics, ShardCtx, WSSLState,
+                              _client_stage_bytes, _client_vmap, _gather,
+                              _loc, _local_plan, _per_client_losses, _psum)
 from repro.models import transformer as tf
 from repro.optim import clip_by_global_norm, make_optimizer
 from repro.sim import faults as sim_faults
@@ -137,7 +139,8 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
                      *,
                      model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
                      train_cfg: TrainConfig, schedule,
-                     impl: str = "chunked"
+                     impl: str = "chunked",
+                     shard_ctx: Optional[ShardCtx] = None
                      ) -> Tuple[WSSLState, AsyncState, AsyncRoundMetrics]:
     """One bounded-staleness communication round.
 
@@ -145,14 +148,28 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
     composition, same RNG streams — the async logic consumes no
     randomness), inserting the deadline/buffer machinery as exact
     identities at ``deadline = inf``.  Returns the new
-    ``(WSSLState, AsyncState)`` plus :class:`AsyncRoundMetrics`."""
+    ``(WSSLState, AsyncState)`` plus :class:`AsyncRoundMetrics`.
+
+    shard_ctx follows the same contract as ``wssl_round``: None is the
+    flat golden trace; under ``make_sharded_async_round_fn`` the stacked
+    leaves (client stack, optimizer slots, EF residuals, stale-update
+    buffer) arrive sliced to (N/S, ...) while ``AsyncState.pending`` /
+    ``staleness`` and every admission-control vector stay full and
+    replicated, so the deadline/buffer bookkeeping is bit-identical to
+    flat on every shard."""
+    ctx = shard_ctx
     n = wssl_cfg.num_clients
+    n_loc = n // ctx.num_shards if ctx is not None else n
     remat = train_cfg.remat
     num_edges = len(state.edge_stages)
     kind = wssl_cfg.async_rounds.staleness_weighting
     if async_p is None:
         async_p = async_params(wssl_cfg.async_rounds, n)
     rng, rng_sel = jax.random.split(state.rng)
+    comp_cfg = wssl_cfg.compression
+    if comp_cfg.enabled and comp_p is None:
+        comp_p = compress_mod.compression_params(comp_cfg)
+    compress_acts = comp_cfg.enabled and comp_cfg.activations
 
     # ---- fault injection (repro.sim): sampled first so the latency
     # signal can reach the selection draw (fold_in keeps the Gumbel draw
@@ -202,10 +219,22 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
 
     agg_w = wssl.aggregation_weights(state.importance, part, wssl_cfg)
 
+    # local views (identity when flat): the admission-control vectors above
+    # are all full + replicated — computed from the replicated rng/latency
+    # signal, so every shard agrees bit-for-bit on who is on time, admitted,
+    # or evicted; the per-client tensor work below touches local rows only
+    plan_loc = _local_plan(plan, ctx, n_loc)
+    part_loc = _loc(part, ctx, n_loc)
+    agg_w_loc = _loc(agg_w, ctx, n_loc)
+    arriving_loc = _loc(arriving, ctx, n_loc)
+    admit_loc = _loc(admit, ctx, n_loc)
+    pending_loc = _loc(astate.pending, ctx, n_loc)
+
     tokens = shard_activation(batch["tokens"], "client", None, None)
     labels = shard_activation(batch["labels"], "client", None, None)
     if plan is not None:
-        labels = sim_faults.corrupt_labels(plan, labels, model_cfg.vocab_size)
+        labels = sim_faults.corrupt_labels(plan_loc, labels,
+                                           model_cfg.vocab_size)
     embeds = batch.get("embeds")
 
     # ---- split fwd / chained N-phase backward (as in wssl_round) --------
@@ -221,7 +250,14 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
 
     acts, client_vjp = jax.vjp(client_fn, state.client_stack)
     acts = shard_activation(acts, "client", None, None, None)
-    hop_bytes = [acts.size // n * acts.dtype.itemsize]
+    hop_bytes = [acts.size // acts.shape[0] * acts.dtype.itemsize]
+    act_wire_bytes = []
+    if compress_acts:
+        acts = compress_mod.compress_activations(
+            acts, jax.random.fold_in(rng_sel, 0xAC0), comp_cfg, comp_p)
+        act_wire_bytes.append(compress_mod.activation_wire_bytes(
+            acts.size // acts.shape[0] // acts.shape[-1], acts.shape[-1],
+            comp_cfg, comp_p))
 
     x, edge_vjps = acts, []
     edge_aux = jnp.zeros((), jnp.float32)
@@ -235,44 +271,72 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
                 in_axes=(None, 0))(p, a)
         (x, aux_j), vjp = jax.vjp(edge_fn, state.edge_stages[j], x)
         x = shard_activation(x, "client", None, None, None)
-        edge_aux = edge_aux + aux_j.mean()
+        edge_aux = edge_aux + (
+            _psum(aux_j.mean(), ctx) / ctx.num_shards
+            if ctx is not None else aux_j.mean())
         edge_vjps.append(vjp)
-        hop_bytes.append(x.size // n * x.dtype.itemsize)
+        hop_bytes.append(x.size // x.shape[0] * x.dtype.itemsize)
+        if compress_acts:
+            x = compress_mod.compress_activations(
+                x, jax.random.fold_in(rng_sel, 0xAC1 + j), comp_cfg, comp_p)
+            act_wire_bytes.append(compress_mod.activation_wire_bytes(
+                x.size // x.shape[0] // x.shape[-1], x.shape[-1],
+                comp_cfg, comp_p))
 
     def server_loss(sp, a):
         losses, aux = _per_client_losses(model_cfg, sp, a, labels, impl,
                                          remat, span)
-        total = jnp.sum(agg_w * part * losses) + aux
+        local = jnp.sum(agg_w_loc * part_loc * losses)
+        if ctx is not None:
+            total = (jax.lax.psum(local, ctx.axis)
+                     + jax.lax.psum(aux, ctx.axis) / ctx.num_shards)
+        else:
+            total = local + aux
         return total, losses
 
     (loss, pcl), (g_server, g_x) = jax.value_and_grad(
         server_loss, argnums=(0, 1), has_aux=True)(state.server_params, x)
     loss = loss + edge_aux
+    g_server = _psum(g_server, ctx)
 
-    aux_ct = jnp.full((n,), 1.0 / n, jnp.float32)
+    if compress_acts:
+        g_x = compress_mod.compress_activations(
+            g_x, jax.random.fold_in(rng_sel, 0xDC0 + num_edges), comp_cfg,
+            comp_p)
+    aux_ct = jnp.full((n_loc,), 1.0 / n, jnp.float32)
     g_edges = []
-    for vjp in reversed(edge_vjps):
+    for back_j, vjp in enumerate(reversed(edge_vjps)):
         g_e, g_x = vjp((g_x, aux_ct))
-        g_edges.append(g_e)
+        if compress_acts:
+            g_x = compress_mod.compress_activations(
+                g_x, jax.random.fold_in(rng_sel,
+                                        0xDC0 + num_edges - 1 - back_j),
+                comp_cfg, comp_p)
+        g_edges.append(_psum(g_e, ctx))
     g_edges.reverse()
     (g_client,) = client_vjp(g_x)
 
     if train_cfg.grad_clip:
-        g_client, _ = clip_by_global_norm(g_client, train_cfg.grad_clip)
+        g_client, _ = clip_by_global_norm(
+            g_client, train_cfg.grad_clip,
+            axis_name=ctx.axis if ctx is not None else None)
         g_server, _ = clip_by_global_norm(g_server, train_cfg.grad_clip)
         g_edges = [clip_by_global_norm(g, train_cfg.grad_clip)[0]
                    for g in g_edges]
 
     if plan is not None:
         g_client = sim_faults.corrupt_client_grads(
-            plan, g_client, jax.random.fold_in(rng_sel, 0xBAD))
+            plan_loc, g_client,
+            jax.random.fold_in(rng_sel, 0xBAD) if ctx is None
+            else jax.random.fold_in(jax.random.fold_in(rng_sel, 0xBAD),
+                                    ctx.index))
 
     # ---- optimizer (masked to this round's fresh workers) ---------------
     _, opt_update = make_optimizer(train_cfg.optimizer)
     lr = schedule(state.round_index)
     new_cstack, new_opt_c = opt_update(
         state.client_stack, g_client, state.opt_client, lr=lr,
-        weight_decay=train_cfg.weight_decay, mask=part)
+        weight_decay=train_cfg.weight_decay, mask=part_loc)
     new_server, new_opt_s = opt_update(
         state.server_params, g_server, state.opt_server, lr=lr,
         weight_decay=train_cfg.weight_decay)
@@ -287,15 +351,16 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
         # the update lands, not how much of it — neutralize the straggler
         # partial-progress scale (Byzantine amplification still applies)
         eff_scale = jnp.where(jnp.isinf(async_p.deadline),
-                              plan.grad_scale, jnp.ones_like(plan.grad_scale))
+                              plan_loc.grad_scale,
+                              jnp.ones_like(plan_loc.grad_scale))
         new_cstack = sim_faults.scale_client_updates(
-            plan._replace(grad_scale=eff_scale), new_cstack,
+            plan_loc._replace(grad_scale=eff_scale), new_cstack,
             state.client_stack)
         # adaptive adversaries craft mean(honest) − z·std(honest) from this
         # round's fresh workers (exact identity when no client is adaptive)
-        new_cstack = sim_faults.adaptive_scale_updates(plan, new_cstack,
-                                                       state.client_stack,
-                                                       part)
+        new_cstack = sim_faults.adaptive_scale_updates(
+            plan_loc, new_cstack, state.client_stack, part_loc,
+            axis_name=ctx.axis if ctx is not None else None)
     # a round in which every client missed the deadline (or dropped) must
     # leave the shared stages untouched — no CE signal, and the aux term +
     # weight decay must not step them.  Unlike the sync round this guard is
@@ -324,7 +389,7 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
                                      impl=impl, remat=remat)
             return loss
 
-        val_losses = _client_vmap(val_one)(new_cstack)
+        val_losses = _gather(_client_vmap(val_one)(new_cstack), ctx)
         importance = wssl.compute_importance(val_losses, wssl_cfg,
                                              prev=state.importance)
     else:
@@ -338,9 +403,10 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
     contrib = wssl.async_contribution(on_time, arriving, astate.staleness,
                                       async_p.max_staleness, kind=kind,
                                       alpha=async_p.staleness_alpha)
+    contrib_loc = _loc(contrib, ctx, n_loc)
 
     def _deliver(new, old, buf):
-        arr = _pc(arriving, new) > 0
+        arr = _pc(arriving_loc, new) > 0
         stale = (old.astype(jnp.float32)
                  + buf.astype(jnp.float32)).astype(new.dtype)
         return jnp.where(arr, stale, new)
@@ -354,17 +420,16 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
     # bytes for fresh and stale uploads alike and the staleness discount
     # (already fused into `contrib`) composes with the reconstruction.
     # scheme="none" traces no op — the async-off golden stays bit-for-bit.
-    comp_cfg = wssl_cfg.compression
     ef_residual = state.ef_residual
     if comp_cfg.enabled:
-        if comp_p is None:
-            comp_p = compress_mod.compression_params(comp_cfg)
         delta = jax.tree.map(lambda a, b: a.astype(jnp.float32)
                              - b.astype(jnp.float32),
                              agg_stack, state.client_stack)
+        rng_comp = jax.random.fold_in(rng_sel, 0xC09)
+        if ctx is not None:
+            rng_comp = jax.random.fold_in(rng_comp, ctx.index)
         sent, ef_residual = compress_mod.apply_compression(
-            delta, ef_residual, contrib, jax.random.fold_in(rng_sel, 0xC09),
-            comp_cfg, comp_p)
+            delta, ef_residual, contrib_loc, rng_comp, comp_cfg, comp_p)
         agg_stack = jax.tree.map(
             lambda old, s: (old.astype(jnp.float32) + s).astype(old.dtype),
             state.client_stack, sent)
@@ -373,8 +438,15 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
     # fractional staleness discount into their coefficients; robust rules
     # (trimmed_mean/median/krum/...) binarize membership internally — a
     # stale vote counts fully or not at all, never at a fraction
-    global_client = aggregation.aggregate_clients(
-        agg_stack, importance, contrib, wssl_cfg, safe=True, params=agg_p)
+    if ctx is None:
+        global_client = aggregation.aggregate_clients(
+            agg_stack, importance, contrib, wssl_cfg, safe=True,
+            params=agg_p)
+    else:
+        global_client = aggregation.shard_aggregate_clients(
+            agg_stack, importance, contrib, wssl_cfg, axis_name=ctx.axis,
+            shard_index=ctx.index, num_shards=ctx.num_shards, safe=True,
+            params=agg_p)
     presync_cstack = new_cstack     # the round's actual local updates
     new_cstack = wssl.broadcast_global(new_cstack, global_client)
 
@@ -385,9 +457,9 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
     def _park(new, old, buf):
         delta = (new.astype(jnp.float32)
                  - old.astype(jnp.float32)).astype(buf.dtype)
-        keep = _pc((astate.pending > 1).astype(jnp.float32), buf) > 0
+        keep = _pc((pending_loc > 1).astype(jnp.float32), buf) > 0
         parked = jnp.where(keep, buf, jnp.zeros_like(buf))
-        return jnp.where(_pc(admit, buf) > 0, delta, parked)
+        return jnp.where(_pc(admit_loc, buf) > 0, delta, parked)
 
     new_buffer = jax.tree.map(_park, presync_cstack, state.client_stack,
                               astate.buffer)
@@ -416,14 +488,28 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
     else:
         update_comp = update_raw
         bytes_sync = sync_round_bytes(uploads, n, stage_bytes) + bytes_resync
+    if ctx is not None:
+        cross, intra = hierarchical_sync_bytes(
+            uploads, n, ctx.num_shards, stage_bytes,
+            aggregation.rule_decomposes(wssl_cfg))
+    else:
+        cross = intra = jnp.zeros((), jnp.float32)
+    if compress_acts:
+        act_raw = sel * 2.0 * jnp.asarray(hop_bytes, jnp.float32).sum()
+        act_comp = sel * 2.0 * sum(act_wire_bytes)
+    else:
+        act_raw = act_comp = jnp.zeros((), jnp.float32)
     metrics = RoundMetrics(
-        loss=loss, per_client_loss=pcl * part, val_loss=val_losses,
+        loss=loss, per_client_loss=_gather(pcl, ctx) * part,
+        val_loss=val_losses,
         mask=part, importance=importance,
         bytes_up=bytes_per_hop.sum(), bytes_down=bytes_per_hop.sum(),
         bytes_per_hop=bytes_per_hop,
         bytes_sync=bytes_sync,
         bytes_update_raw=update_raw,
         bytes_update_comp=update_comp,
+        bytes_cross_shard=cross, bytes_intra_shard=intra,
+        bytes_act_raw=act_raw, bytes_act_comp=act_comp,
     )
     amet = AsyncRoundMetrics(
         base=metrics,
@@ -462,3 +548,143 @@ def make_async_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
     return functools.partial(async_wssl_round, model_cfg=model_cfg,
                              wssl_cfg=wssl_cfg, train_cfg=train_cfg,
                              schedule=schedule, impl=impl)
+
+
+def make_sharded_async_round_fn(model_cfg: ModelConfig,
+                                wssl_cfg: WSSLConfig,
+                                train_cfg: TrainConfig, mesh, *,
+                                impl: str = "chunked"):
+    """Client-axis scale-out of :func:`async_wssl_round` — the async twin
+    of ``core.round.make_sharded_round_fn`` (same mesh contract, same
+    spec rules, same psum/all_gather crossings).  The stale-update buffer
+    shards with the client stack; ``pending``/``staleness`` stay
+    replicated so admission control is bit-identical on every shard.
+
+    Returns ``round_fn(state, astate, batch, val_batch=None,
+    scenario=None, async_p=None, agg_p=None, comp_p=None)`` with the same
+    ``cache_size()`` / ``num_shards`` / ``mesh`` attributes.  Because the
+    deadline is a traced scalar in ``AsyncParams``, a host-side
+    :class:`DeadlineController` can retune it every round without
+    recompiling."""
+    from contextlib import nullcontext
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    from repro import sharding as shardlib
+    from repro.core.round import _linear_shard_index, abstract_state
+    from repro.optim.schedule import make_schedule
+
+    dp = shardlib.data_axes_of(mesh)
+    if not dp:
+        raise ValueError("make_sharded_async_round_fn: mesh has no data "
+                         f"axis (axes: {mesh.axis_names})")
+    num_shards = 1
+    for a in dp:
+        num_shards *= mesh.shape[a]
+    n = wssl_cfg.num_clients
+    if n % num_shards != 0:
+        raise ValueError(
+            f"num_clients={n} must divide evenly over {num_shards} client "
+            f"shards (mesh data axes {dp})")
+    axis = dp if len(dp) > 1 else dp[0]
+    auto = shardlib.auto_axes_of(mesh)
+    arules = shardlib.auto_rules(mesh) if auto else {}
+    schedule = make_schedule(train_cfg.schedule, train_cfg.learning_rate,
+                             train_cfg.warmup_steps, train_cfg.rounds)
+    _, state_axes = abstract_state(model_cfg, wssl_cfg, train_cfg)
+    st_specs = shardlib.round_state_specs(mesh, state_axes)
+    client_spec = shardlib.client_axis_spec(mesh)
+    rep = PartitionSpec()
+    # buffer leaves shard with the stack; the (N,) counters replicate
+    astate_specs = AsyncState(pending=rep, staleness=rep,
+                              buffer=client_spec)
+
+    def body(state, astate, batch, val_batch, scenario, async_p, agg_p,
+             comp_p):
+        ctx = ShardCtx(axis=axis, num_shards=num_shards,
+                       index=_linear_shard_index(dp, mesh))
+        bind = (shardlib.use_sharding_rules(mesh, arules) if arules
+                else nullcontext())
+        with bind:
+            return async_wssl_round(
+                state, astate, batch, val_batch, scenario, async_p, agg_p,
+                comp_p, model_cfg=model_cfg, wssl_cfg=wssl_cfg,
+                train_cfg=train_cfg, schedule=schedule, impl=impl,
+                shard_ctx=ctx)
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(st_specs, astate_specs, client_spec, rep, rep, rep, rep,
+                  rep),
+        out_specs=(st_specs, astate_specs, rep),
+        check_rep=False, auto=frozenset(auto))
+    jitted = jax.jit(mapped)
+
+    def round_fn(state, astate, batch, val_batch=None, scenario=None,
+                 async_p=None, agg_p=None, comp_p=None):
+        return jitted(state, astate, batch, val_batch, scenario, async_p,
+                      agg_p, comp_p)
+
+    round_fn.place_state = lambda state: jax.device_put(
+        state, shardlib.named_shardings_like(mesh, st_specs, state))
+    round_fn.place_astate = lambda astate: jax.device_put(
+        astate, shardlib.named_shardings_like(mesh, astate_specs, astate))
+    round_fn.place_batch = lambda batch: jax.device_put(
+        batch, shardlib.named_shardings_like(mesh, client_spec, batch))
+    round_fn.mesh = mesh
+    round_fn.num_shards = num_shards
+    round_fn.cache_size = lambda: jitted._cache_size()
+    round_fn._jitted = jitted
+    return round_fn
+
+
+class DeadlineController:
+    """Host-side adaptive round deadline → a target mean-staleness budget.
+
+    Multiplicative-exponential control on the observed per-round mean
+    staleness of arriving stale updates (``AsyncRoundMetrics.
+    mean_staleness``):
+
+        deadline ← clip(deadline · exp(gain · (staleness − target)),
+                        min_deadline, max_deadline)
+
+    A *larger* deadline admits more clients on time, so staleness above
+    budget raises the deadline and staleness below budget tightens it —
+    trading round wall-clock (the deadline is the round's simulated
+    duration) against staleness-discounted contribution quality.  Rounds
+    with no arrivals carry no staleness observation and leave the
+    deadline unchanged.
+
+    The deadline reaches the executable only as the traced
+    ``AsyncParams.deadline`` scalar, so retuning every round costs zero
+    recompiles — the knob the one-executable invariant exists for.  Used
+    by the scale sweep (``benchmarks/robustness.py --staleness-target``)."""
+
+    def __init__(self, target_staleness: float, deadline: float = 1.0,
+                 gain: float = 0.25, min_deadline: float = 0.25,
+                 max_deadline: float = 64.0):
+        if target_staleness < 0:
+            raise ValueError("target_staleness must be >= 0")
+        if not 0 < min_deadline <= max_deadline:
+            raise ValueError("need 0 < min_deadline <= max_deadline")
+        self.target = float(target_staleness)
+        self.gain = float(gain)
+        self.min_deadline = float(min_deadline)
+        self.max_deadline = float(max_deadline)
+        self.deadline = float(min(max(deadline, min_deadline),
+                                  max_deadline))
+
+    def update(self, mean_staleness, arrived=1) -> float:
+        """Observe one round; returns the deadline for the next round."""
+        if float(arrived) > 0:
+            err = float(mean_staleness) - self.target
+            self.deadline = min(self.max_deadline,
+                                max(self.min_deadline,
+                                    self.deadline * math.exp(
+                                        self.gain * err)))
+        return self.deadline
+
+    def params(self, cfg: AsyncRoundsConfig,
+               num_clients: int) -> AsyncParams:
+        """Current-deadline AsyncParams (other scalars from ``cfg``)."""
+        return async_params(cfg, num_clients)._replace(
+            deadline=jnp.asarray(self.deadline, jnp.float32))

@@ -100,6 +100,19 @@ class RoundComm:
     # logs that predate compression accounting; equal when scheme="none".
     bytes_update_raw: int = 0
     bytes_update_comp: int = 0
+    # hierarchical aggregation (client-sharded rounds): sync traffic split
+    # by locality.  intra = selected clients → their shard's edge
+    # aggregator (stays on-host); cross = shard partials up the combine
+    # tree + the global stage back down — O(shards·|θ|) for decomposable
+    # rules, O(sel·|θ|) for the all-gather fallback.  Both zero on flat
+    # (unsharded) logs, where bytes_sync is the only sync column.
+    bytes_cross_shard: int = 0
+    bytes_intra_shard: int = 0
+    # activation-path compression (CompressionConfig.activations): raw vs
+    # wire bytes of the per-hop smashed activations/gradients.  Zero when
+    # activation compression is off (bytes_per_hop carries the raw hops).
+    bytes_act_raw: int = 0
+    bytes_act_comp: int = 0
 
     @property
     def total(self) -> int:
@@ -115,14 +128,20 @@ class CommLog:
                bytes_per_hop: Sequence[int] = (), arrived: int = 0,
                mean_staleness: float = 0.0, buffered: int = 0,
                evicted: int = 0, bytes_update_raw: int = 0,
-               bytes_update_comp: int = 0) -> None:
+               bytes_update_comp: int = 0, bytes_cross_shard: int = 0,
+               bytes_intra_shard: int = 0, bytes_act_raw: int = 0,
+               bytes_act_comp: int = 0) -> None:
         self.rounds.append(RoundComm(round_index, selected, int(bytes_up),
                                      int(bytes_down), int(bytes_sync),
                                      tuple(int(b) for b in bytes_per_hop),
                                      int(arrived), float(mean_staleness),
                                      int(buffered), int(evicted),
                                      int(bytes_update_raw),
-                                     int(bytes_update_comp)))
+                                     int(bytes_update_comp),
+                                     int(bytes_cross_shard),
+                                     int(bytes_intra_shard),
+                                     int(bytes_act_raw),
+                                     int(bytes_act_comp)))
 
     @property
     def total_bytes(self) -> int:
@@ -163,6 +182,17 @@ class CommLog:
             out["update_raw_MB"] = raw / 1e6
             out["update_comp_MB"] = comp / 1e6
             out["update_compression_ratio"] = raw / comp
+        cross = float(np.sum([r.bytes_cross_shard for r in self.rounds]))
+        if cross > 0:
+            out["cross_shard_MB"] = cross / 1e6
+            out["intra_shard_MB"] = float(
+                np.sum([r.bytes_intra_shard for r in self.rounds])) / 1e6
+        act_raw = float(np.sum([r.bytes_act_raw for r in self.rounds]))
+        act_comp = float(np.sum([r.bytes_act_comp for r in self.rounds]))
+        if act_comp > 0:
+            out["act_raw_MB"] = act_raw / 1e6
+            out["act_comp_MB"] = act_comp / 1e6
+            out["act_compression_ratio"] = act_raw / act_comp
         if self.is_async:
             arr = [r.arrived for r in self.rounds]
             out["stale_arrivals"] = float(np.sum(arr))
@@ -191,6 +221,26 @@ def sync_round_bytes(selected, num_clients, client_stage_bytes):
     broadcast back to all N clients.  Works with traced scalars (the fused
     round calls it with a dynamic selection count)."""
     return (selected + num_clients) * client_stage_bytes
+
+
+def hierarchical_sync_bytes(selected, num_clients: int, num_shards: int,
+                            client_stage_bytes, decomposes: bool):
+    """(cross_shard, intra_shard) sync bytes of a two-level aggregation.
+
+    intra: each selected client uploads its stage to its shard's edge
+    aggregator — on-host traffic, same O(sel·|θ|) the flat round pays.
+    cross: what actually crosses shards.  A decomposable rule ships one
+    partial per shard up the combine tree and the global stage back down
+    (2·S·|θ| — independent of the client count); the all-gather fallback
+    moves every selected update to every shard's copy of the rule once
+    (sel·|θ|) plus the broadcast leg (S·|θ|).  Works with traced
+    ``selected`` (the fused round calls it with a dynamic mask sum)."""
+    intra = selected * client_stage_bytes
+    if decomposes:
+        cross = 2 * num_shards * client_stage_bytes
+    else:
+        cross = (selected + num_shards) * client_stage_bytes
+    return cross, intra
 
 
 def multihop_round_bytes(selected: int, batch: int, seq: int,

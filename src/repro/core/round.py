@@ -32,13 +32,60 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, TrainConfig, WSSLConfig
 from repro import compress as compress_mod
 from repro.core import aggregation, wssl
-from repro.core.protocol import sync_round_bytes
+from repro.core.protocol import hierarchical_sync_bytes, sync_round_bytes
 from repro.models import transformer as tf
 from repro.sim import faults as sim_faults
 from repro.optim import adamw_update, clip_by_global_norm, make_optimizer
-from repro.sharding import current_mesh, shard_activation
+from repro.sharding import bound_axes, current_mesh, shard_activation
 
 Params = Any
+
+
+class ShardCtx(NamedTuple):
+    """Client-axis sharding context of a shard_map-wrapped round.
+
+    ``None`` everywhere a round runs flat — every ctx helper below then
+    returns its argument unchanged (zero added ops), so the flat trace
+    stays bit-for-bit the golden round.  Inside
+    :func:`make_sharded_round_fn` the round runs once per shard with
+    client-stacked leaves sliced to (N/S, ...) and all (N,) decision
+    vectors (importance, masks, fault plans) kept full + replicated: the
+    selection, fault cohorts, and importance EMA are computed identically
+    on every shard from the replicated rng, bit-identical to the flat
+    round, and only per-client tensor work is local."""
+
+    axis: Any              # shard_map axis name (or tuple) of the client dim
+    num_shards: int        # static S = product of the data-axis sizes
+    index: jax.Array       # this shard's position, lax.axis_index-derived
+
+
+def _loc(vec: Optional[jax.Array], ctx: Optional[ShardCtx],
+         n_loc: int) -> Optional[jax.Array]:
+    """Slice a full (N,) per-client vector to this shard's (N/S,) rows."""
+    if ctx is None or vec is None:
+        return vec
+    return jax.lax.dynamic_slice_in_dim(vec, ctx.index * n_loc, n_loc)
+
+
+def _local_plan(plan, ctx: Optional[ShardCtx], n_loc: int):
+    """A FaultPlan with every (N,) field sliced to the local shard."""
+    if ctx is None or plan is None:
+        return plan
+    return type(plan)(*[_loc(v, ctx, n_loc) for v in plan])
+
+
+def _psum(x, ctx: Optional[ShardCtx]):
+    """Cross-shard sum (identity when flat) — works on pytrees."""
+    if ctx is None:
+        return x
+    return jax.lax.psum(x, ctx.axis)
+
+
+def _gather(vec: jax.Array, ctx: Optional[ShardCtx]) -> jax.Array:
+    """Concatenate a per-shard (N/S, ...) array back to full (N, ...)."""
+    if ctx is None:
+        return vec
+    return jax.lax.all_gather(vec, ctx.axis, axis=0, tiled=True)
 
 
 class WSSLState(NamedTuple):
@@ -72,6 +119,14 @@ class RoundMetrics(NamedTuple):
     # client updates (equal when compression is off)
     bytes_update_raw: jax.Array = 0.0
     bytes_update_comp: jax.Array = 0.0
+    # hierarchical aggregation (sharded rounds only — 0.0 when flat):
+    # cross-shard combine-tree traffic vs on-shard client→edge uploads
+    bytes_cross_shard: jax.Array = 0.0
+    bytes_intra_shard: jax.Array = 0.0
+    # activation-path compression (CompressionConfig.activations): raw vs
+    # wire bytes of the per-hop crossings, both directions (0.0 when off)
+    bytes_act_raw: jax.Array = 0.0
+    bytes_act_comp: jax.Array = 0.0
 
 
 def init_state(rng, model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
@@ -157,11 +212,20 @@ def _client_spmd_axes():
     """spmd_axis_name for client-axis vmaps: binds the vmapped (client) dim
     to the data-parallel mesh axes so sharding constraints *inside* the
     per-client computation keep the client dim sharded instead of letting
-    SPMD propagation replicate it (decisive for MoE dispatch buffers)."""
+    SPMD propagation replicate it (decisive for MoE dispatch buffers).
+
+    Consults the bound *rules* (not the raw mesh shape): inside a
+    client-sharded shard_map body the data axes are manual — the
+    ``sharding.auto_rules`` binding there deliberately drops the "client"
+    rule, so the vmap stays plain."""
     mesh = current_mesh()
     if mesh is None:
         return None
-    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    phys, _ = bound_axes("client")
+    if phys is None:
+        return None
+    flat = phys if isinstance(phys, tuple) else (phys,)
+    axes = tuple(a for a in flat if a in mesh.shape)
     if not axes:
         return None
     return axes[0] if len(axes) == 1 else axes
@@ -190,9 +254,13 @@ def _per_client_losses(cfg: ModelConfig, server_params: Params,
     return losses, auxes.mean()
 
 
-def _client_stage_bytes(client_stack: Params, n: int) -> int:
-    """Static: bytes of ONE client's stage (the sync/aggregation payload)."""
-    return sum((l.size // n) * l.dtype.itemsize
+def _client_stage_bytes(client_stack: Params, n: int = 0) -> int:
+    """Static: bytes of ONE client's stage (the sync/aggregation payload).
+
+    Reads the stacked-client count off the leading leaf dim (``n`` is kept
+    for call-site compat but unused) so local (N/S, ...) shard stacks and
+    full (N, ...) stacks both report the same per-client payload."""
+    return sum((l.size // l.shape[0]) * l.dtype.itemsize
                for l in jax.tree.leaves(client_stack))
 
 
@@ -203,7 +271,9 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
                comp_p: Optional["compress_mod.CompressionParams"] = None, *,
                model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
                train_cfg: TrainConfig, schedule,
-               impl: str = "chunked") -> Tuple[WSSLState, RoundMetrics]:
+               impl: str = "chunked",
+               shard_ctx: Optional[ShardCtx] = None
+               ) -> Tuple[WSSLState, RoundMetrics]:
     """One communication round.  batch: tokens/labels (N, b, S);
     val_batch: tokens/labels (bv, S) — the server-held ζ.  When val_batch is
     None the validation pass is skipped and importance weights carry over
@@ -229,11 +299,28 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
     executable serves every compression *level* of a scheme kind; only the
     kind itself (none | topk | quant) is a static branch.  With
     scheme="none" no compression op is traced at all and the round is
-    bit-for-bit the pre-compression round (golden-tested)."""
+    bit-for-bit the pre-compression round (golden-tested).
+
+    shard_ctx: None runs the round flat (the golden trace, unchanged op
+    for op).  Inside :func:`make_sharded_round_fn` the round body executes
+    per shard: ``state.client_stack`` / batch / ef_residual leaves arrive
+    sliced to (N/S, ...), every (N,) decision vector is computed full +
+    replicated (selection and fault draws bit-identical to flat), losses
+    and shared-stage gradients cross shards via psum, validation losses
+    via all_gather, and aggregation dispatches through the two-level tree
+    (``aggregation.shard_aggregate_clients``)."""
+    ctx = shard_ctx
     n = wssl_cfg.num_clients
+    n_loc = n // ctx.num_shards if ctx is not None else n
     remat = train_cfg.remat
     num_edges = len(state.edge_stages)
     rng, rng_sel = jax.random.split(state.rng)
+    comp_cfg = wssl_cfg.compression
+    if comp_cfg.enabled and comp_p is None:
+        comp_p = compress_mod.compression_params(comp_cfg)
+    # activation-path compression (CompressionConfig.activations): hop
+    # crossings ship a lossy wire reconstruction; off = nothing traced
+    compress_acts = comp_cfg.enabled and comp_cfg.activations
 
     # ---- fault injection (repro.sim): sampled first so the latency
     # signal can reach the selection draw; the fold_in stream keeps the
@@ -259,10 +346,19 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
 
     agg_w = wssl.aggregation_weights(state.importance, mask, wssl_cfg)
 
+    # local views for the per-client tensor work: everything above (plan,
+    # mask, agg_w) is a full replicated (N,) decision vector; below, the
+    # shard only touches its own N/S client rows.  All four are the
+    # originals when flat.
+    plan_loc = _local_plan(plan, ctx, n_loc)
+    mask_loc = _loc(mask, ctx, n_loc)
+    agg_w_loc = _loc(agg_w, ctx, n_loc)
+
     tokens = shard_activation(batch["tokens"], "client", None, None)
     labels = shard_activation(batch["labels"], "client", None, None)
     if plan is not None:
-        labels = sim_faults.corrupt_labels(plan, labels, model_cfg.vocab_size)
+        labels = sim_faults.corrupt_labels(plan_loc, labels,
+                                           model_cfg.vocab_size)
     embeds = batch.get("embeds")
 
     # ---- Algorithm 2 steps 2-4: split fwd / chained N-phase backward ----
@@ -278,7 +374,14 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
 
     acts, client_vjp = jax.vjp(client_fn, state.client_stack)
     acts = shard_activation(acts, "client", None, None, None)
-    hop_bytes = [acts.size // n * acts.dtype.itemsize]
+    hop_bytes = [acts.size // acts.shape[0] * acts.dtype.itemsize]
+    act_wire_bytes = []
+    if compress_acts:
+        acts = compress_mod.compress_activations(
+            acts, jax.random.fold_in(rng_sel, 0xAC0), comp_cfg, comp_p)
+        act_wire_bytes.append(compress_mod.activation_wire_bytes(
+            acts.size // acts.shape[0] // acts.shape[-1], acts.shape[-1],
+            comp_cfg, comp_p))
 
     # forward relay through the shared edge stages (per-client activations,
     # shared params: vmap over the client axis with in_axes=None params).
@@ -296,32 +399,69 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
                 in_axes=(None, 0))(p, a)
         (x, aux_j), vjp = jax.vjp(edge_fn, state.edge_stages[j], x)
         x = shard_activation(x, "client", None, None, None)
-        edge_aux = edge_aux + aux_j.mean()
+        # aux_j.mean() is the mean over the clients in view; with a ctx
+        # that view is local, so psum/S completes the global mean exactly
+        # (equal shard sizes)
+        edge_aux = edge_aux + (
+            _psum(aux_j.mean(), ctx) / ctx.num_shards
+            if ctx is not None else aux_j.mean())
         edge_vjps.append(vjp)
-        hop_bytes.append(x.size // n * x.dtype.itemsize)
+        hop_bytes.append(x.size // x.shape[0] * x.dtype.itemsize)
+        if compress_acts:
+            x = compress_mod.compress_activations(
+                x, jax.random.fold_in(rng_sel, 0xAC1 + j), comp_cfg, comp_p)
+            act_wire_bytes.append(compress_mod.activation_wire_bytes(
+                x.size // x.shape[0] // x.shape[-1], x.shape[-1],
+                comp_cfg, comp_p))
 
     def server_loss(sp, a):
         losses, aux = _per_client_losses(model_cfg, sp, a, labels, impl,
                                          remat, span)
-        total = jnp.sum(agg_w * mask * losses) + aux
+        local = jnp.sum(agg_w_loc * mask_loc * losses)
+        if ctx is not None:
+            # the CE term sums over all clients; the MoE aux is a mean
+            # over clients, so psum of per-shard means / S completes it
+            total = (jax.lax.psum(local, ctx.axis)
+                     + jax.lax.psum(aux, ctx.axis) / ctx.num_shards)
+        else:
+            total = local + aux
         return total, losses
 
     (loss, pcl), (g_server, g_x) = jax.value_and_grad(
         server_loss, argnums=(0, 1), has_aux=True)(state.server_params, x)
     loss = loss + edge_aux
+    # with a ctx the vjp ran per shard on a replicated server stage — each
+    # shard's g_server carries only its local clients' contribution; the
+    # psum completes the global gradient (and keeps it replicated)
+    g_server = _psum(g_server, ctx)
 
     # backward relay: inject each hop's cotangent upstream (the mean-aux
     # term contributes 1/N per client alongside the activation cotangent)
-    aux_ct = jnp.full((n,), 1.0 / n, jnp.float32)
+    if compress_acts:
+        # down-hop wire compression: the returned server→edge gradient is
+        # itself a (N, b, s, d) activation-shaped tensor; chaining the
+        # lossy reconstruction into the manual vjp relay makes the
+        # backward a straight-through estimate of the compressed forward
+        g_x = compress_mod.compress_activations(
+            g_x, jax.random.fold_in(rng_sel, 0xDC0 + num_edges), comp_cfg,
+            comp_p)
+    aux_ct = jnp.full((n_loc,), 1.0 / n, jnp.float32)
     g_edges = []
-    for vjp in reversed(edge_vjps):
+    for back_j, vjp in enumerate(reversed(edge_vjps)):
         g_e, g_x = vjp((g_x, aux_ct))
-        g_edges.append(g_e)
+        if compress_acts:
+            g_x = compress_mod.compress_activations(
+                g_x, jax.random.fold_in(rng_sel,
+                                        0xDC0 + num_edges - 1 - back_j),
+                comp_cfg, comp_p)
+        g_edges.append(_psum(g_e, ctx))
     g_edges.reverse()
     (g_client,) = client_vjp(g_x)
 
     if train_cfg.grad_clip:
-        g_client, _ = clip_by_global_norm(g_client, train_cfg.grad_clip)
+        g_client, _ = clip_by_global_norm(
+            g_client, train_cfg.grad_clip,
+            axis_name=ctx.axis if ctx is not None else None)
         g_server, _ = clip_by_global_norm(g_server, train_cfg.grad_clip)
         g_edges = [clip_by_global_norm(g, train_cfg.grad_clip)[0]
                    for g in g_edges]
@@ -332,14 +472,17 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
         # adversary's noise inflates the joint norm and attenuates every
         # clean client's gradient through the clip factor
         g_client = sim_faults.corrupt_client_grads(
-            plan, g_client, jax.random.fold_in(rng_sel, 0xBAD))
+            plan_loc, g_client,
+            jax.random.fold_in(rng_sel, 0xBAD) if ctx is None
+            else jax.random.fold_in(jax.random.fold_in(rng_sel, 0xBAD),
+                                    ctx.index))
 
     # ---- optimizer (masked for unselected clients) ---------------------
     _, opt_update = make_optimizer(train_cfg.optimizer)
     lr = schedule(state.round_index)
     new_cstack, new_opt_c = opt_update(
         state.client_stack, g_client, state.opt_client, lr=lr,
-        weight_decay=train_cfg.weight_decay, mask=mask)
+        weight_decay=train_cfg.weight_decay, mask=mask_loc)
     new_server, new_opt_s = opt_update(
         state.server_params, g_server, state.opt_server, lr=lr,
         weight_decay=train_cfg.weight_decay)
@@ -353,14 +496,14 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
         # straggler / slow-hop partial progress and Byzantine amplification
         # on the post-optimizer update (a constant gradient scale would be
         # inert under Adam)
-        new_cstack = sim_faults.scale_client_updates(plan, new_cstack,
+        new_cstack = sim_faults.scale_client_updates(plan_loc, new_cstack,
                                                      state.client_stack)
         # adaptive adversaries craft their sent stage from the round's
         # honest updates (mean − z·std) — inside the honest spread, so
         # importance down-weighting cannot catch them
-        new_cstack = sim_faults.adaptive_scale_updates(plan, new_cstack,
-                                                       state.client_stack,
-                                                       mask)
+        new_cstack = sim_faults.adaptive_scale_updates(
+            plan_loc, new_cstack, state.client_stack, mask_loc,
+            axis_name=ctx.axis if ctx is not None else None)
         # an all-dropped round must leave the shared stages untouched too:
         # with no participants the CE term is zero but the aux term and
         # weight decay would still step (and decay) them every empty round
@@ -389,7 +532,7 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
                                      impl=impl, remat=remat)
             return loss
 
-        val_losses = _client_vmap(val_one)(new_cstack)
+        val_losses = _gather(_client_vmap(val_one)(new_cstack), ctx)
         importance = wssl.compute_importance(val_losses, wssl_cfg,
                                              prev=state.importance)
     else:
@@ -401,17 +544,19 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
     # reconstructs old + decompress(compress(Δ + e)) before aggregation,
     # so every registry rule runs on the wire-reconstructed updates.  With
     # scheme="none" this whole block is absent from the trace.
-    comp_cfg = wssl_cfg.compression
     ef_residual = state.ef_residual
     if comp_cfg.enabled:
-        if comp_p is None:
-            comp_p = compress_mod.compression_params(comp_cfg)
         delta = jax.tree.map(lambda a, b: a.astype(jnp.float32)
                              - b.astype(jnp.float32),
                              new_cstack, state.client_stack)
+        rng_comp = jax.random.fold_in(rng_sel, 0xC09)
+        if ctx is not None:
+            # decorrelate the per-coordinate stochastic draws across
+            # shards (the flat round draws one (N, m) tensor per leaf;
+            # per-shard draws necessarily differ — documented tolerance)
+            rng_comp = jax.random.fold_in(rng_comp, ctx.index)
         sent, ef_residual = compress_mod.apply_compression(
-            delta, ef_residual, mask, jax.random.fold_in(rng_sel, 0xC09),
-            comp_cfg, comp_p)
+            delta, ef_residual, mask_loc, rng_comp, comp_cfg, comp_p)
         agg_stack = jax.tree.map(
             lambda old, s: (old.astype(jnp.float32) + s).astype(old.dtype),
             state.client_stack, sent)
@@ -420,9 +565,17 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
 
     # ---- Algorithm 2 step 5: registry-dispatched aggregation + sync -----
     # (dropout can empty the selection; `safe` falls back to a no-op sync)
-    global_client = aggregation.aggregate_clients(
-        agg_stack, importance, mask, wssl_cfg, safe=plan is not None,
-        params=agg_p)
+    if ctx is None:
+        global_client = aggregation.aggregate_clients(
+            agg_stack, importance, mask, wssl_cfg, safe=plan is not None,
+            params=agg_p)
+    else:
+        # two-level tree: per-shard partial aggregate, psum combine (or
+        # the documented all_gather fallback for non-decomposable rules)
+        global_client = aggregation.shard_aggregate_clients(
+            agg_stack, importance, mask, wssl_cfg, axis_name=ctx.axis,
+            shard_index=ctx.index, num_shards=ctx.num_shards,
+            safe=plan is not None, params=agg_p)
     new_cstack = wssl.broadcast_global(new_cstack, global_client)
 
     # ---- communication accounting --------------------------------------
@@ -440,14 +593,28 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
     else:
         update_comp = update_raw
         bytes_sync = sync_round_bytes(sel, n, stage_bytes)
+    if ctx is not None:
+        cross, intra = hierarchical_sync_bytes(
+            sel, n, ctx.num_shards, stage_bytes,
+            aggregation.rule_decomposes(wssl_cfg))
+    else:
+        cross = intra = jnp.zeros((), jnp.float32)
+    if compress_acts:
+        act_raw = sel * 2.0 * jnp.asarray(hop_bytes, jnp.float32).sum()
+        act_comp = sel * 2.0 * sum(act_wire_bytes)
+    else:
+        act_raw = act_comp = jnp.zeros((), jnp.float32)
     metrics = RoundMetrics(
-        loss=loss, per_client_loss=pcl * mask, val_loss=val_losses,
+        loss=loss, per_client_loss=_gather(pcl, ctx) * mask,
+        val_loss=val_losses,
         mask=mask, importance=importance,
         bytes_up=bytes_per_hop.sum(), bytes_down=bytes_per_hop.sum(),
         bytes_per_hop=bytes_per_hop,
         bytes_sync=bytes_sync,
         bytes_update_raw=update_raw,
         bytes_update_comp=update_comp,
+        bytes_cross_shard=cross, bytes_intra_shard=intra,
+        bytes_act_raw=act_raw, bytes_act_comp=act_comp,
     )
     new_state = WSSLState(
         client_stack=new_cstack, server_params=new_server,
@@ -467,3 +634,102 @@ def make_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
     return functools.partial(wssl_round, model_cfg=model_cfg,
                              wssl_cfg=wssl_cfg, train_cfg=train_cfg,
                              schedule=schedule, impl=impl)
+
+
+def _linear_shard_index(dp, mesh) -> jax.Array:
+    """This device's position along the (possibly multi-axis) client
+    sharding, row-major in mesh-axis order — matches both P(dp) block
+    layout and all_gather concatenation order."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in dp:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def make_sharded_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
+                          train_cfg: TrainConfig, mesh, *,
+                          impl: str = "chunked"):
+    """Client-axis scale-out: :func:`wssl_round` shard_map-ed over the
+    data axes of ``mesh``.
+
+    Each shard holds N/S clients (stack, optimizer slots, EF residuals,
+    batch rows sliced by the in_specs); per-client forward/backward and
+    compression run fully local, shared-stage gradients and the
+    aggregation tree combine via psum, and the (N,) decision vectors stay
+    replicated so selection/faults are bit-identical to the flat round.
+    Any non-data mesh axis (e.g. "model") is left ``auto`` — the compiler
+    partitions the shared server/edge stages over it per
+    ``sharding.auto_rules``, which is the heterogeneous per-stage
+    placement: client stages manual on data, server stage model-parallel
+    (or replicated on a 1-D data mesh).
+
+    Returns ``round_fn(state, batch, val_batch=None, scenario=None,
+    agg_p=None, comp_p=None)`` — jit-wrapped, one executable per call
+    signature (all scenario/agg/compression knobs stay dynamic scalars).
+    ``round_fn.cache_size()`` exposes the compiled-executable count for
+    the one-executable regression; ``num_shards``/``mesh`` ride along.
+    Matches the flat round within fp32 reassociation tolerance
+    (tests/test_sharded_round.py; the psum of per-shard partial sums
+    reorders the client reduction)."""
+    from contextlib import nullcontext
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    from repro import sharding as shardlib
+    from repro.optim.schedule import make_schedule
+
+    dp = shardlib.data_axes_of(mesh)
+    if not dp:
+        raise ValueError("make_sharded_round_fn: mesh has no data axis "
+                         f"(axes: {mesh.axis_names})")
+    num_shards = 1
+    for a in dp:
+        num_shards *= mesh.shape[a]
+    n = wssl_cfg.num_clients
+    if n % num_shards != 0:
+        raise ValueError(
+            f"num_clients={n} must divide evenly over {num_shards} client "
+            f"shards (mesh data axes {dp})")
+    axis = dp if len(dp) > 1 else dp[0]
+    auto = shardlib.auto_axes_of(mesh)
+    arules = shardlib.auto_rules(mesh) if auto else {}
+    schedule = make_schedule(train_cfg.schedule, train_cfg.learning_rate,
+                             train_cfg.warmup_steps, train_cfg.rounds)
+    _, state_axes = abstract_state(model_cfg, wssl_cfg, train_cfg)
+    st_specs = shardlib.round_state_specs(mesh, state_axes)
+    client_spec = shardlib.client_axis_spec(mesh)
+    rep = PartitionSpec()
+
+    def body(state, batch, val_batch, scenario, agg_p, comp_p):
+        ctx = ShardCtx(axis=axis, num_shards=num_shards,
+                       index=_linear_shard_index(dp, mesh))
+        bind = (shardlib.use_sharding_rules(mesh, arules) if arules
+                else nullcontext())
+        with bind:
+            return wssl_round(state, batch, val_batch, scenario, agg_p,
+                              comp_p, model_cfg=model_cfg,
+                              wssl_cfg=wssl_cfg, train_cfg=train_cfg,
+                              schedule=schedule, impl=impl, shard_ctx=ctx)
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(st_specs, client_spec, rep, rep, rep, rep),
+        out_specs=(st_specs, rep),
+        check_rep=False, auto=frozenset(auto))
+    jitted = jax.jit(mapped)
+
+    def round_fn(state, batch, val_batch=None, scenario=None, agg_p=None,
+                 comp_p=None):
+        return jitted(state, batch, val_batch, scenario, agg_p, comp_p)
+
+    # commit inputs to the round's own shardings up front: host-built
+    # (single-device) state/batch otherwise costs one extra copy-in
+    # executable on the first call before the steady-state one takes over
+    round_fn.place_state = lambda state: jax.device_put(
+        state, shardlib.named_shardings_like(mesh, st_specs, state))
+    round_fn.place_batch = lambda batch: jax.device_put(
+        batch, shardlib.named_shardings_like(mesh, client_spec, batch))
+    round_fn.mesh = mesh
+    round_fn.num_shards = num_shards
+    round_fn.cache_size = lambda: jitted._cache_size()
+    round_fn._jitted = jitted
+    return round_fn

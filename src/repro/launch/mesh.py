@@ -27,6 +27,31 @@ def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
     return jax.make_mesh(shape, axes)
 
 
+def make_client_mesh(shards: int, model: int = 1) -> Mesh:
+    """Client scale-out mesh: ``shards`` data-parallel slots for the
+    sharded round (``core/round.py::make_sharded_round_fn``), optionally ×
+    ``model`` for a model-parallel server stage.
+
+    Unlike ``jax.make_mesh`` this takes a device *prefix*, so a
+    forced-host-platform CI run (``XLA_FLAGS=--xla_force_host_platform_
+    device_count=8``) can build 1/2/4/8-shard meshes from the same
+    process without the product having to equal the device count."""
+    import numpy as np
+
+    need = shards * model
+    devs = jax.devices()
+    if len(devs) < need:
+        raise ValueError(
+            f"make_client_mesh({shards}, model={model}) needs {need} "
+            f"devices, have {len(devs)} — on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"before jax initializes")
+    grid = np.array(devs[:need]).reshape(shards, model)
+    if model == 1:
+        return Mesh(grid.reshape(shards), ("data",))
+    return Mesh(grid, ("data", "model"))
+
+
 def mesh_info(mesh: Mesh) -> Dict[str, int]:
     return dict(mesh.shape)
 

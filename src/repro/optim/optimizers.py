@@ -89,10 +89,17 @@ def sgd_update(params: Params, grads: Params, state: SgdState, *,
     return new_params, SgdState(step=state.step + 1, mom=new_m)
 
 
-def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jax.Array]:
+def clip_by_global_norm(grads: Params, max_norm: float,
+                        axis_name=None) -> Tuple[Params, jax.Array]:
+    # axis_name: when the tree is sharded over a shard_map axis (the
+    # stacked client gradients in the sharded round), psum the squared
+    # norm so the clip threshold sees the same global norm the flat round
+    # computes; None adds no op (the flat trace is untouched).
     leaves = jax.tree.leaves(grads)
-    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                         for l in leaves))
+    gnorm2 = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    if axis_name is not None:
+        gnorm2 = jax.lax.psum(gnorm2, axis_name)
+    gnorm = jnp.sqrt(gnorm2)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
                         grads), gnorm

@@ -134,6 +134,124 @@ def named_sharding_tree(mesh: Mesh, rules: Dict[str, Logical], axes_tree,
 
 
 # ---------------------------------------------------------------------------
+# Client scale-out (shard_map) spec rules — core/round.py::make_sharded_round_fn
+# ---------------------------------------------------------------------------
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    """The mesh axes the client axis shards over (manual under shard_map)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def auto_axes_of(mesh: Mesh) -> frozenset:
+    """Mesh axes left to the compiler inside a client-sharded shard_map
+    body (everything that is not a data-parallel axis — e.g. 'model', so
+    the server stage can stay model-parallel while the client axis is
+    manually sharded)."""
+    return frozenset(mesh.axis_names) - set(data_axes_of(mesh))
+
+
+def is_axes_leaf(a) -> bool:
+    """True for the logical-axes tuples stored at state_axes leaves."""
+    return isinstance(a, tuple) and all(
+        isinstance(e, (str, type(None), tuple)) for e in a)
+
+
+def client_axis_spec(mesh: Mesh) -> PartitionSpec:
+    """PartitionSpec entry for a leading stacked-client dimension."""
+    dp = data_axes_of(mesh)
+    return PartitionSpec(dp if len(dp) > 1 else dp[0])
+
+
+def round_state_specs(mesh: Mesh, state_axes):
+    """shard_map in/out specs for a WSSLState-shaped axes tree.
+
+    Leaves whose logical axes lead with "client" shard their first dim
+    over the data axes; everything else (server/edge stages, optimizer
+    slots, importance, rng) is replicated across the client shards.  Any
+    'model'-axis placement of the shared stages rides through shard_map's
+    ``auto`` axes instead — specs here only name the manual axes."""
+    dp = data_axes_of(mesh)
+    entry = dp if len(dp) > 1 else dp[0]
+
+    def one(axes):
+        if axes and axes[0] == "client":
+            # no trailing Nones: shard_map canonicalizes its outputs to
+            # the unpadded spec, and a padded-but-equal spec on the input
+            # would read as a different sharding to the jit cache
+            return PartitionSpec(entry)
+        return PartitionSpec()
+
+    return jax.tree.map(one, state_axes, is_leaf=is_axes_leaf)
+
+
+def client_batch_specs(mesh: Mesh, batch) -> object:
+    """Specs for a stacked per-client batch: leaves (N, ...) shard dim 0."""
+    dp = data_axes_of(mesh)
+    entry = dp if len(dp) > 1 else dp[0]
+    return jax.tree.map(lambda l: PartitionSpec(entry), batch)
+
+
+def replicated_specs(tree) -> object:
+    """P() for every leaf (dynamic scalar params, val batches, ...)."""
+    return jax.tree.map(lambda _: PartitionSpec(), tree)
+
+
+def named_shardings_like(mesh: Mesh, spec_tree, tree):
+    """Broadcast a (possibly prefix) PartitionSpec tree over ``tree`` into
+    a NamedSharding pytree matching ``tree`` leaf-for-leaf — the
+    ``jax.device_put`` placement for shard_map inputs.  Spec leaves that
+    sit over empty subtrees (e.g. ``ef_residual=()``) vanish, exactly as
+    shard_map's own prefix matching treats them."""
+    is_spec = lambda x: isinstance(x, PartitionSpec)
+    specs_flat, spec_def = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    subtrees = spec_def.flatten_up_to(tree)
+    placed = [jax.tree.map(lambda _: NamedSharding(mesh, sp), sub)
+              for sp, sub in zip(specs_flat, subtrees)]
+    return jax.tree.unflatten(spec_def, placed)
+
+
+def auto_rules(mesh: Mesh, base: Optional[Dict[str, Logical]] = None
+               ) -> Dict[str, Logical]:
+    """Restrict a rule set to the compiler-managed (auto) axes of a
+    client-sharded shard_map body.
+
+    Rules that bind to a manual (data-parallel) axis are dropped — inside
+    the body those axes are already consumed by the client sharding, and a
+    with_sharding_constraint naming them would be invalid.  What survives
+    is exactly the model-parallel placement of the shared stages (heads /
+    ff / vocab → 'model'), giving the heterogeneous per-stage layout:
+    client stages manually sharded on data, server stage auto-partitioned
+    on 'model' (or replicated on a 1-D data mesh)."""
+    if base is None:
+        base = default_rules()
+    auto = auto_axes_of(mesh)
+
+    def ok(phys: Logical) -> bool:
+        flat = phys if isinstance(phys, tuple) else (phys,)
+        return all(a in auto for a in flat)
+
+    return {k: v for k, v in base.items()
+            if v is not None and ok(v) and not (k in ("client", "batch"))}
+
+
+def wssl_state_shardings(mesh: Mesh, state_axes, state_shapes,
+                         rules: Optional[Dict[str, Logical]] = None):
+    """NamedSharding tree for a WSSLState: the heterogeneous per-stage
+    placement.  Client-stage leaves (leading "client" axis) shard over the
+    data axes; shared (edge/server) stages resolve their tensor axes
+    through ``rules`` (default: tensor dims → 'model' when present), so on
+    a ("data", "model") mesh the server stage is model-parallel while the
+    client stack is data-sharded."""
+    if rules is None:
+        rules = default_rules()
+    rules = dict(rules)
+    dp = data_axes_of(mesh)
+    rules["client"] = dp if len(dp) > 1 else dp[0]
+    return named_sharding_tree(mesh, rules, state_axes, state_shapes)
+
+
+# ---------------------------------------------------------------------------
 # Default rule sets (launch code picks / overrides these per shape kind)
 # ---------------------------------------------------------------------------
 

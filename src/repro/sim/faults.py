@@ -247,7 +247,8 @@ def scale_client_updates(plan: FaultPlan, new_params: Params,
 
 
 def adaptive_scale_updates(plan: FaultPlan, new_params: Params,
-                           old_params: Params, mask: jax.Array) -> Params:
+                           old_params: Params, mask: jax.Array,
+                           axis_name=None) -> Params:
     """Adaptive Byzantine attack crafted to evade importance down-weighting
     ("a little is enough" style, Baruch et al.).
 
@@ -268,16 +269,24 @@ def adaptive_scale_updates(plan: FaultPlan, new_params: Params,
     Applied to the post-optimizer update like the other Byzantine scalings;
     honest statistics run over ``mask``-participating, non-adaptive
     clients.  Exact bit-for-bit identity when no client is adaptive
-    (``jnp.where`` on an all-false mask)."""
+    (``jnp.where`` on an all-false mask).
+
+    ``axis_name``: when the client axis is sharded over a shard_map axis
+    (plan/mask sliced to the local shard, param leaves local), the honest
+    mean/std must still run over the *global* population — the partial
+    sums are psum'd across shards.  None adds no collective (the flat
+    trace is untouched)."""
+    _sum = (jax.lax.psum if axis_name is not None
+            else (lambda x, _: x))
     is_adaptive = (plan.adaptive > 0).astype(jnp.float32)
     honest = mask * plan.keep * (1.0 - is_adaptive)
-    denom = jnp.maximum(honest.sum(), 1.0)
+    denom = jnp.maximum(_sum(honest.sum(), axis_name), 1.0)
 
     def one(new, old):
         delta = new.astype(jnp.float32) - old.astype(jnp.float32)
         h = _per_client(honest, delta)
-        mu = (h * delta).sum(axis=0) / denom
-        var = (h * (delta - mu) ** 2).sum(axis=0) / denom
+        mu = _sum((h * delta).sum(axis=0), axis_name) / denom
+        var = _sum((h * (delta - mu) ** 2).sum(axis=0), axis_name) / denom
         crafted_delta = mu - _per_client(plan.adaptive, delta) * jnp.sqrt(var)
         crafted = (old.astype(jnp.float32) + crafted_delta).astype(new.dtype)
         return jnp.where(_per_client(is_adaptive, new) > 0, crafted, new)

@@ -57,6 +57,15 @@ register_scenario(Scenario(name="adaptive-scaled-aggressive",
                            adaptive_fraction=0.25, adaptive_margin=3.0,
                            skew_alpha=0.5))
 register_scenario(Scenario(name="noniid-dirichlet", skew_alpha=0.1))
+# the scale-out regime (client-axis shard_map, docs/scaling.md): Dirichlet
+# skew at a 1024-client population.  Same dynamic lowering as every other
+# preset — only the partition (and the benchmark's default --clients) read
+# the hint, so the round executable is shared with noniid-dirichlet at
+# equal shapes.  Fleet-scale faults ride along: mild dropout + stragglers
+# make the selection/latency path representative of a real 1k fleet.
+register_scenario(Scenario(name="noniid-1k", skew_alpha=0.3,
+                           dropout_prob=0.05, straggler_fraction=0.2,
+                           straggler_slowdown=4.0, num_clients_hint=1024))
 # multi-hop faults: no-ops on single-cut pipelines (num_hops == 0)
 register_scenario(Scenario(name="edge-dropout", hop_dropout_prob=0.3))
 register_scenario(Scenario(name="edge-latency", hop_latency_prob=0.5,

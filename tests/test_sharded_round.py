@@ -1,0 +1,388 @@
+"""Client-axis scale-out (core/round.py::make_sharded_round_fn and the
+hierarchical aggregation tree, docs/scaling.md).
+
+Two tiers:
+
+* **Host-side** (always run): the two-level tree reference
+  ``aggregation.tree_aggregate`` against the flat registry dispatch, the
+  Σcoefs = 1 fixed-point property, the DeadlineController, and the O(n)
+  Dirichlet partition rebalance at 10k clients.
+
+* **Mesh** (skipped below 4 devices — tier-1 runs single-device CPU by
+  design, see conftest.py): sharded-vs-flat equivalence, the byte model,
+  and the one-executable invariant.  CI runs this file under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Equivalence tolerances (measured, documented in docs/scaling.md):
+selection/fault decisions are replicated and bit-identical; the
+aggregated client stack differs only by psum reassociation of the
+per-shard partials (~1e-7 on the tiny config, asserted at 1e-5);
+post-optimizer server/edge params and val losses amplify that through
+Adam's sqrt/eps nonlinearity (~1e-3, asserted at 5e-3).  The all-gather
+fallback (trimmed_mean) reduces in flat client order, so the aggregation
+operator itself is exact (tested host-side); end to end it shares the
+same band because the global grad-norm clip psums the squared norm."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (AsyncRoundsConfig, ModelConfig, TrainConfig,
+                          WSSLConfig)
+from repro.core import aggregation
+from repro.core.async_round import (DeadlineController, async_params,
+                                    init_async_state, make_async_round_fn,
+                                    make_sharded_async_round_fn)
+from repro.core.round import init_state, make_round_fn, make_sharded_round_fn
+from repro.data.partition import partition_dirichlet, partition_for_scenario
+from repro.data.synthetic import lm_batch
+from repro.launch.mesh import make_client_mesh
+from repro.sim.registry import get_scenario
+
+TINY = ModelConfig(name="tiny-shard", num_layers=2, d_model=32, num_heads=2,
+                   num_kv_heads=2, d_ff=64, vocab_size=64,
+                   dtype="float32", param_dtype="float32")
+
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="sharded round needs >= 4 devices (CI: XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+
+def _cfgs(rule="importance", n=8, async_rounds=None):
+    kw = {} if async_rounds is None else {"async_rounds": async_rounds}
+    w = WSSLConfig(num_clients=n, participation_fraction=0.5,
+                   importance_temp=0.1, importance_ema=0.8,
+                   aggregation=rule, **kw)
+    t = TrainConfig(remat=False, learning_rate=1e-3, warmup_steps=0,
+                    schedule="constant")
+    return w, t
+
+
+def _batches(n, seed=0, b=2, s=16):
+    d = lm_batch(n * b, s, TINY.vocab_size, seed=seed)
+    batch = {"tokens": jnp.asarray(d["tokens"]).reshape(n, b, s),
+             "labels": jnp.asarray(d["labels"]).reshape(n, b, s)}
+    vd = lm_batch(4, s, TINY.vocab_size, seed=999)
+    val = {"tokens": jnp.asarray(vd["tokens"]),
+           "labels": jnp.asarray(vd["labels"])}
+    return batch, val
+
+
+def _run_flat(w, t, rounds=2):
+    state, _ = init_state(jax.random.PRNGKey(0), TINY, w, t)
+    rf = jax.jit(make_round_fn(TINY, w, t, impl="dense"))
+    for r in range(rounds):
+        batch, val = _batches(w.num_clients, seed=r)
+        state, m = rf(state, batch, val)
+    return state, m
+
+
+def _run_sharded(w, t, shards, rounds=2):
+    mesh = make_client_mesh(shards)
+    rf = make_sharded_round_fn(TINY, w, t, mesh, impl="dense")
+    state, _ = init_state(jax.random.PRNGKey(0), TINY, w, t)
+    state = rf.place_state(state)
+    for r in range(rounds):
+        batch, val = _batches(w.num_clients, seed=r)
+        state, m = rf(state, rf.place_batch(batch), val)
+    return state, m, rf
+
+
+# ---------------------------------------------------------------------------
+# mesh tier: sharded round == flat round
+# ---------------------------------------------------------------------------
+
+
+@needs_mesh
+@pytest.mark.parametrize("shards", [2, 4])
+def test_sharded_matches_flat_importance(shards):
+    """Decomposable path: per-shard partial sums + psum.  Decisions are
+    bit-identical, numerics within the documented reassociation band."""
+    w, t = _cfgs("importance")
+    fs, fm = _run_flat(w, t)
+    ss, sm, _ = _run_sharded(w, t, shards)
+    np.testing.assert_array_equal(np.asarray(fm.mask), np.asarray(sm.mask))
+    # importance derives from the post-update validation losses, so it
+    # carries the reassociation band rather than being bit-identical
+    np.testing.assert_allclose(np.asarray(fm.importance),
+                               np.asarray(sm.importance), atol=1e-5, rtol=0)
+    for fl, sl in zip(jax.tree.leaves(fs.client_stack),
+                      jax.tree.leaves(ss.client_stack)):
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(sl),
+                                   atol=1e-5, rtol=0)
+    for fl, sl in zip(jax.tree.leaves(fs.server_params),
+                      jax.tree.leaves(ss.server_params)):
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(sl),
+                                   atol=5e-3, rtol=0)
+    np.testing.assert_allclose(np.asarray(fm.val_loss),
+                               np.asarray(sm.val_loss), atol=5e-3, rtol=0)
+    np.testing.assert_allclose(float(fm.loss), float(sm.loss), atol=5e-3)
+
+
+@needs_mesh
+def test_sharded_matches_flat_trimmed_mean_fallback():
+    """Non-decomposable rule: the all-gather fallback reassembles the full
+    stack in flat client order, so the aggregation *operator* is exact
+    (asserted host-side in test_tree_aggregate_matches_flat).  End to end
+    the fused round still sits in the reassociation band — the global
+    grad-norm clip psums the squared norm before the rule ever runs —
+    so the trajectory shares the decomposable path's tolerances."""
+    w, t = _cfgs("trimmed_mean")
+    fs, fm = _run_flat(w, t)
+    ss, sm, _ = _run_sharded(w, t, 4)
+    np.testing.assert_array_equal(np.asarray(fm.mask), np.asarray(sm.mask))
+    for fl, sl in zip(jax.tree.leaves(fs.client_stack),
+                      jax.tree.leaves(ss.client_stack)):
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(sl),
+                                   atol=1e-5, rtol=0)
+    for fl, sl in zip(jax.tree.leaves(fs.server_params),
+                      jax.tree.leaves(ss.server_params)):
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(sl),
+                                   atol=5e-3, rtol=0)
+
+
+@needs_mesh
+def test_sharded_cross_bytes_scale_with_shards_not_clients():
+    """The acceptance criterion: cross-shard sync bytes are 2·S·|θ| for a
+    decomposable rule (independent of the client count) and
+    (sel+S)·|θ| for the fallback — both strictly below the flat O(n·|θ|)
+    when n >> S."""
+    w, t = _cfgs("importance")
+    _, m2, _ = _run_sharded(w, t, 2, rounds=1)
+    _, m4, _ = _run_sharded(w, t, 4, rounds=1)
+    c2, c4 = float(m2.bytes_cross_shard), float(m4.bytes_cross_shard)
+    stage2, stage4 = c2 / (2 * 2), c4 / (2 * 4)
+    assert stage2 == stage4 > 0          # same |θ|, cross = 2·S·|θ|
+    assert c4 / c2 == pytest.approx(2.0)
+    # fallback pays (sel + S)·|θ| — more than the tree whenever sel > S
+    wt, _ = _cfgs("trimmed_mean")
+    _, mt, _ = _run_sharded(wt, t, 2, rounds=1)
+    sel = float(jnp.sum(mt.mask))
+    assert float(mt.bytes_cross_shard) == pytest.approx(
+        (sel + 2) * stage2)
+    # intra-shard (client → edge) traffic is the flat round's O(sel·|θ|)
+    assert float(m2.bytes_intra_shard) == pytest.approx(
+        float(jnp.sum(m2.mask)) * stage2)
+
+
+@needs_mesh
+@pytest.mark.parametrize("shards", [2, 4])
+def test_one_executable_across_rounds(shards):
+    """place_state/place_batch commit inputs to the round's shardings, so
+    repeated rounds (including the state fed back in) hit one compiled
+    executable — the scale sweep's exit-checked invariant."""
+    w, t = _cfgs("importance")
+    _, _, rf = _run_sharded(w, t, shards, rounds=3)
+    assert rf.cache_size() == 1
+    assert rf.num_shards == shards
+
+
+@needs_mesh
+def test_sharded_async_matches_flat():
+    """The async twin: bounded-staleness rounds shard the same way (buffer
+    rides the client axis; admission/arrival decisions replicated)."""
+    acfg = AsyncRoundsConfig(deadline=1.0, max_staleness=4)
+    w, t = _cfgs("importance", async_rounds=acfg)
+    ap = async_params(acfg, w.num_clients)
+    sc = get_scenario("async-stragglers")
+    from repro.sim.faults import scenario_params
+    sp = scenario_params(sc)
+
+    def run(step, place_state=None, place_astate=None, place_batch=None):
+        state, _ = init_state(jax.random.PRNGKey(0), TINY, w, t)
+        astate = init_async_state(state)
+        if place_state is not None:
+            state, astate = place_state(state), place_astate(astate)
+        for r in range(2):
+            batch, val = _batches(w.num_clients, seed=r)
+            if place_batch is not None:
+                batch = place_batch(batch)
+            state, astate, m = step(state, astate, batch, val, sp, ap)
+        return state, m
+
+    flat = jax.jit(make_async_round_fn(TINY, w, t, impl="dense"))
+    mesh = make_client_mesh(4)
+    rf = make_sharded_async_round_fn(TINY, w, t, mesh, impl="dense")
+    fs, fm = run(flat)
+    ss, sm = run(rf, rf.place_state, rf.place_astate, rf.place_batch)
+    np.testing.assert_array_equal(np.asarray(fm.base.mask),
+                                  np.asarray(sm.base.mask))
+    assert float(fm.arrived) == float(sm.arrived)
+    assert float(fm.evicted) == float(sm.evicted)
+    for fl, sl in zip(jax.tree.leaves(fs.client_stack),
+                      jax.tree.leaves(ss.client_stack)):
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(sl),
+                                   atol=1e-5, rtol=0)
+    for fl, sl in zip(jax.tree.leaves(fs.server_params),
+                      jax.tree.leaves(ss.server_params)):
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(sl),
+                                   atol=5e-3, rtol=0)
+    assert rf.cache_size() == 1
+
+
+@needs_mesh
+def test_uneven_clients_rejected():
+    w, t = _cfgs("importance", n=6)
+    with pytest.raises(ValueError, match="divide evenly"):
+        make_sharded_round_fn(TINY, w, t, make_client_mesh(4))
+
+
+# ---------------------------------------------------------------------------
+# host tier: the aggregation tree reference
+# ---------------------------------------------------------------------------
+
+
+def _stack(seed=0, n=8, shape=(4, 3)):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(n,) + shape), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)}
+
+
+@pytest.mark.parametrize("rule", ["importance", "uniform", "trimmed_mean"])
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_tree_aggregate_matches_flat(rule, shards):
+    """Hierarchical ≡ flat: the two-level tree reference reproduces the
+    registry dispatch for decomposable rules (up to fp32 reassociation)
+    and exactly for the all-gather fallback."""
+    cfg = WSSLConfig(num_clients=8, aggregation=rule)
+    stacked = _stack()
+    rng = np.random.default_rng(7)
+    imp = jnp.asarray(rng.dirichlet(np.ones(8)), jnp.float32)
+    mask = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 0], jnp.float32)
+    flat = aggregation.aggregate_clients(stacked, imp, mask, cfg)
+    tree = aggregation.tree_aggregate(stacked, imp, mask, cfg,
+                                      num_shards=shards)
+    for k in stacked:
+        if aggregation.rule_decomposes(cfg):
+            np.testing.assert_allclose(np.asarray(flat[k]),
+                                       np.asarray(tree[k]), atol=1e-6,
+                                       rtol=0)
+        else:
+            np.testing.assert_array_equal(np.asarray(flat[k]),
+                                          np.asarray(tree[k]))
+
+
+@pytest.mark.parametrize("rule", ["importance", "uniform"])
+@pytest.mark.parametrize("mask", [
+    [1, 1, 1, 1, 1, 1, 1, 1],
+    [1, 0, 1, 1, 0, 1, 1, 0],
+    [0.5, 0.0, 0.25, 1.0, 0.0, 0.0, 0.75, 0.0],   # staleness-discounted
+    [0, 0, 0, 0, 0, 0, 1, 0],
+    [0, 0, 0, 0, 0, 0, 0, 0],                     # empty → safe fallback
+])
+def test_coefficients_sum_to_one(rule, mask):
+    """Σcoefs = 1 under arbitrary masks: aggregating a stack of identical
+    clients must return that client exactly — the invariant the global
+    normalization of the per-shard partials exists to preserve."""
+    cfg = WSSLConfig(num_clients=8, aggregation=rule)
+    rng = np.random.default_rng(3)
+    one = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)}
+    stacked = {"w": jnp.broadcast_to(one["w"], (8, 4, 3))}
+    imp = jnp.asarray(rng.dirichlet(np.ones(8)), jnp.float32)
+    m = jnp.asarray(mask, jnp.float32)
+    for shards in (1, 2, 4):
+        out = aggregation.tree_aggregate(stacked, imp, m, cfg,
+                                         num_shards=shards, safe=True)
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(one["w"]), atol=1e-6, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# host tier: adaptive deadline controller
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_controller_tracks_target():
+    c = DeadlineController(target_staleness=1.0, deadline=2.0, gain=0.5)
+    up = c.update(3.0)          # staleness above budget → admit more
+    assert up > 2.0
+    down = DeadlineController(target_staleness=1.0, deadline=2.0,
+                              gain=0.5).update(0.0)
+    assert down < 2.0
+    # converged: observing the target leaves the deadline fixed
+    c2 = DeadlineController(target_staleness=1.0, deadline=2.0)
+    assert c2.update(1.0) == pytest.approx(2.0)
+
+
+def test_deadline_controller_holds_without_arrivals():
+    c = DeadlineController(target_staleness=0.5, deadline=4.0)
+    assert c.update(0.0, arrived=0) == 4.0
+    assert c.deadline == 4.0
+
+
+def test_deadline_controller_clips_to_bounds():
+    c = DeadlineController(target_staleness=0.0, deadline=1.0, gain=5.0,
+                           min_deadline=0.5, max_deadline=8.0)
+    for _ in range(10):
+        c.update(100.0)
+    assert c.deadline == 8.0
+    for _ in range(10):
+        c.update(-100.0)
+    assert c.deadline == 0.5
+    with pytest.raises(ValueError):
+        DeadlineController(target_staleness=-1.0)
+    with pytest.raises(ValueError):
+        DeadlineController(target_staleness=1.0, min_deadline=2.0,
+                           max_deadline=1.0)
+
+
+def test_deadline_controller_threads_into_async_params():
+    acfg = AsyncRoundsConfig(deadline=1.0, max_staleness=4)
+    c = DeadlineController(target_staleness=0.5, deadline=3.5)
+    ap = c.params(acfg, num_clients=8)
+    assert float(ap.deadline) == pytest.approx(3.5)
+    # everything else still comes from the config block
+    assert float(ap.max_staleness) == pytest.approx(4.0)
+
+
+# ---------------------------------------------------------------------------
+# host tier: O(n) partition rebalance at fleet scale
+# ---------------------------------------------------------------------------
+
+
+def test_partition_dirichlet_10k_clients_is_fast_and_floored():
+    """The donor pass is a single monotone sweep — 10k clients over a
+    60k-label corpus must finish in seconds (the naive per-deficit rescan
+    is O(C²) and takes minutes), with every client at the clamped floor
+    and no example lost or duplicated."""
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, size=60_000)
+    t0 = time.monotonic()
+    parts = partition_dirichlet(labels, 10_000, alpha=0.3, seed=0,
+                                min_per_client=6)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 20.0, f"rebalance took {elapsed:.1f}s — not O(n)"
+    floor = min(6, len(labels) // 10_000)
+    assert min(len(p) for p in parts) >= floor
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)
+
+
+def test_partition_floor_clamps_when_infeasible():
+    """min_per_client beyond what the corpus supports clamps to
+    len(labels) // num_clients instead of looping forever."""
+    labels = np.random.default_rng(1).integers(0, 4, size=100)
+    parts = partition_dirichlet(labels, 40, alpha=0.1, seed=0,
+                                min_per_client=8)
+    assert min(len(p) for p in parts) >= 100 // 40
+    assert sum(len(p) for p in parts) == 100
+
+
+def test_noniid_1k_scenario_partitions():
+    """The scale preset: Dirichlet skew at the advertised 1024-client
+    population, reachable through the scenario-aware entry point."""
+    sc = get_scenario("noniid-1k")
+    assert sc.num_clients_hint == 1024
+    labels = np.random.default_rng(2).integers(0, 10, size=20_480)
+    parts = partition_for_scenario(labels, sc.num_clients_hint, sc)
+    assert len(parts) == 1024
+    assert sum(len(p) for p in parts) == 20_480
+    # skewed, not stratified: client class histograms differ
+    h0 = np.bincount(labels[parts[0]], minlength=10)
+    h1 = np.bincount(labels[parts[1]], minlength=10)
+    assert not np.array_equal(h0, h1)
