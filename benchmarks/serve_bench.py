@@ -1,24 +1,34 @@
 """Serving benchmark: scan-fused engine vs the legacy host-side decode
-loop, plus the tail-latency × scenario table for fault-routed replicas.
+loop, the tail-latency × scenario table for fault-routed replicas, and a
+bursty SLO trace (paged KV + speculative decode + autoscaling) through
+the model-free SimEngine — million requests by default, ~20k in --smoke.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
 
-Exit checks (process exits non-zero on failure):
+Results land in BENCH_serve.json (tokens/s, p50/p95/p99, SLO attainment,
+speculative acceptance).  Exit checks (process exits non-zero on
+failure):
 
 1. the scan-fused engine beats the legacy per-token Python loop on
    steady-state tokens/s (both warmed up — this measures dispatch/fusion,
    not compile time);
 2. every fault scenario's outputs agree exactly with the clean run
    (greedy decode + re-prefill/replay re-routing is deterministic);
-3. all scenarios share ONE compiled decode executable.
-
-The p50/p95/p99 columns are simulated-clock units (one clean decode step
-= 1.0); wall tok/s is real time.
+3. all scenarios share ONE compiled decode executable;
+4. speculative outputs ≡ greedy outputs and paged ≡ contiguous on the
+   bursty trace (bit-for-bit, per request);
+5. one draft + one verify executable across the speculative run;
+6. the bursty trace drains (unfinished == 0) and the admission loop
+   stayed O(n): arrival_scans ≤ requests + ticks + 1;
+7. a fully-replayed final chunk still logs its hop bytes (regression for
+   the undercount fixed in serve/router.py).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import sys
 import time
 
@@ -29,7 +39,8 @@ import numpy as np
 from repro.config import get_arch, reduced
 from repro.data.synthetic import make_token_stream
 from repro.models import transformer as tf
-from repro.serve import (DecodeEngine, FaultRoutedServer, ServeParams,
+from repro.serve import (DecodeEngine, FaultRoutedServer, PendingWork,
+                         Request, ServeParams, SimEngine, bursty_trace,
                          output_agreement, synthetic_requests)
 from repro.sim import get_scenario
 
@@ -90,6 +101,97 @@ def scenario_table(engine, cfg, params, scenarios, *, requests, prompt_len,
     return reports
 
 
+def bursty_slo_bench(n: int, *, scenario: str, seed: int,
+                     failures: list) -> dict:
+    """The SLO trace: bursty arrivals with mixed deadlines through the
+    model-free SimEngine — paged KV, speculative decode, autoscaling, and
+    the named fault preset all on.  Verifies the serving-plane invariants
+    on a prefix of the trace (bit-for-bit spec ≡ greedy and paged ≡
+    contiguous per request), then clocks the full run."""
+    sc = get_scenario(scenario)
+    mk = lambda **kw: ServeParams(replicas=2, slots=8, chunk=8, max_len=48,
+                                  seed=seed, max_ticks=max(100_000, 2 * n),
+                                  **kw)
+    # correctness prefix: outputs kept, all four configurations compared
+    prefix = bursty_trace(min(n, 2000), seed=seed)
+    base = FaultRoutedServer(SimEngine(), None, mk(), sc).run(prefix)
+    variants = {
+        "speculative": mk(speculate=True, draft_k=4),
+        "paged": mk(block_size=16),
+        "paged+spec+autoscale": mk(block_size=16, speculate=True,
+                                   draft_k=4, autoscale_max=8),
+    }
+    for name, sp in variants.items():
+        rep = FaultRoutedServer(SimEngine(), None, sp, sc).run(prefix)
+        served = {r: t for r, t in base.outputs.items()
+                  if r in rep.outputs}
+        ag = output_agreement(served, rep.outputs)
+        if ag["exact"] != 1.0:
+            failures.append(f"bursty {name}: outputs diverge from the "
+                            f"plain run ({ag})")
+
+    # the clocked run: everything on, outputs dropped (memory)
+    trace = bursty_trace(n, seed=seed)
+    eng = SimEngine()
+    sp = mk(block_size=16, speculate=True, draft_k=4, autoscale_max=8,
+            keep_outputs=False)
+    t0 = time.time()
+    rep = FaultRoutedServer(eng, None, sp, sc).run(trace)
+    wall = time.time() - t0
+    tokens = rep.log.total_tokens
+    if rep.unfinished:
+        failures.append(f"bursty trace truncated at max_ticks: "
+                        f"{rep.unfinished} requests unfinished")
+    if rep.arrival_scans > n + rep.ticks + 1:
+        failures.append(f"admission loop is not O(n): {rep.arrival_scans} "
+                        f"arrival scans for {n} requests / {rep.ticks} "
+                        f"ticks")
+    if eng.draft_compiles != 1 or eng.verify_compiles != 1:
+        failures.append(f"expected ONE draft + ONE verify executable, got "
+                        f"{eng.draft_compiles}/{eng.verify_compiles}")
+
+    # hop-byte regression: a fully-replayed final chunk must still log
+    # its per-hop crossing (the old gate dropped it)
+    prompt = np.arange(1, 7, dtype=np.int64)
+    pre = FaultRoutedServer(
+        SimEngine(), None,
+        ServeParams(replicas=1, slots=1, chunk=4, max_len=16)).run(
+            [Request(rid=0, prompt=prompt, max_new=5)])
+    work = PendingWork(Request(rid=0, prompt=prompt, max_new=5),
+                       done=list(pre.outputs[0]))
+    replayed = FaultRoutedServer(
+        SimEngine(), None,
+        ServeParams(replicas=1, slots=1, chunk=4, max_len=16)).run(
+            [], preloaded=[(0, work)])
+    hop0 = replayed.log.ticks[0].bytes_per_hop
+    if not hop0 or hop0[0] <= 0:
+        failures.append("replayed-final-chunk hop bytes are zero — the "
+                        "hop undercount regressed")
+
+    return {
+        "requests": n,
+        "scenario": scenario,
+        "tokens": int(tokens),
+        "tokens_per_s_wall": tokens / max(wall, 1e-9),
+        "wall_s": wall,
+        "ticks": rep.ticks,
+        "sim_time": rep.sim_time,
+        "p50": rep.percentiles["p50"],
+        "p95": rep.percentiles["p95"],
+        "p99": rep.percentiles["p99"],
+        "slo_attainment": rep.slo.get("attainment", 1.0),
+        "slo": rep.slo,
+        "rejected": len(rep.rejected),
+        "unfinished": rep.unfinished,
+        "acceptance": rep.acceptance,
+        "spec_rounds": rep.spec_rounds,
+        "reroutes": rep.reroutes,
+        "peak_replicas": rep.peak_replicas,
+        "arrival_scans": rep.arrival_scans,
+        "replayed_final_chunk_hop_bytes": int(hop0[0]) if hop0 else 0,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-370m")
@@ -107,10 +209,15 @@ def main() -> None:
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scenarios", default="clean,replica-drop,slow-host")
+    ap.add_argument("--trace-requests", type=int, default=1_000_000,
+                    help="bursty SLO trace size (SimEngine)")
+    ap.add_argument("--trace-scenario", default="replica-drop")
+    ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     if args.smoke:
         args.prompt_len, args.gen, args.requests = 16, 16, 6
         args.repeats = 2
+        args.trace_requests = 20_000
 
     cfg = get_arch(args.arch)
     if not args.full:
@@ -166,6 +273,51 @@ def main() -> None:
     if sweep_compiles != 1:
         failures.append(f"expected ONE decode executable across all "
                         f"scenarios, got {sweep_compiles}")
+
+    # real-engine speculative + paged parity on a small request set
+    spec_eng = DecodeEngine(cfg, impl="dense")
+    reqs = synthetic_requests(cfg, args.requests,
+                              prompt_len=args.prompt_len, gen=args.gen,
+                              seed=args.seed)
+    base_sp = ServeParams(replicas=args.replicas, slots=args.slots,
+                          chunk=args.chunk,
+                          max_len=args.prompt_len + args.gen + args.chunk,
+                          seed=args.seed)
+    plain = FaultRoutedServer(spec_eng, params, base_sp).run(reqs)
+    bs = 8
+    paged_len = base_sp.max_len + (-base_sp.max_len) % bs
+    for name, sp in {
+        "speculative": dataclasses.replace(base_sp, speculate=True,
+                                           draft_k=4),
+        "paged": dataclasses.replace(base_sp, max_len=paged_len,
+                                     block_size=bs),
+    }.items():
+        rep = FaultRoutedServer(DecodeEngine(cfg, impl="dense"), params,
+                                sp).run(reqs)
+        ag = output_agreement(plain.outputs, rep.outputs)
+        if ag["exact"] != 1.0:
+            failures.append(f"real-engine {name} outputs diverge from "
+                            f"plain greedy ({ag})")
+
+    print(f"# bursty SLO trace (SimEngine, {args.trace_requests} requests, "
+          f"scenario={args.trace_scenario}; paged KV + speculative + "
+          f"autoscale)")
+    bench = bursty_slo_bench(args.trace_requests,
+                             scenario=args.trace_scenario, seed=args.seed,
+                             failures=failures)
+    print(f"{'tokens/s (wall)':24s} {bench['tokens_per_s_wall']:10.0f}")
+    print(f"{'p50/p95/p99':24s} {bench['p50']:8.1f} {bench['p95']:8.1f} "
+          f"{bench['p99']:8.1f}")
+    print(f"{'SLO attainment':24s} {bench['slo_attainment']:10.3f}  "
+          f"(rejected {bench['rejected']}, reroutes {bench['reroutes']})")
+    print(f"{'spec acceptance':24s} {bench['acceptance']:10.2f}  "
+          f"({bench['spec_rounds']} rounds)")
+    print(f"{'peak replicas':24s} {bench['peak_replicas']:10d}")
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=2)
+    print(f"wrote {args.out}")
+    print()
+
     if failures:
         print("EXIT CHECKS FAILED:")
         for f in failures:
@@ -173,7 +325,8 @@ def main() -> None:
         sys.exit(1)
     print(f"exit checks passed: engine {speedup:.2f}x legacy, "
           f"clean == fault-mode outputs, one decode executable across "
-          f"{len(scenarios)} scenarios")
+          f"{len(scenarios)} scenarios, spec == greedy, paged == "
+          f"contiguous, bursty trace drained O(n) with hop bytes intact")
 
 
 if __name__ == "__main__":

@@ -277,6 +277,9 @@ class ServeTick:
     bytes_per_hop: Tuple[int, ...] = ()   # split-mode activation crossings
     bytes_sync: int = 0         # re-prefill traffic after a replica drop
     rerouted: int = 0           # requests re-routed away from this replica
+    drafted: int = 0            # speculative draft tokens proposed
+    accepted: int = 0           # draft tokens the verifier accepted
+    rejected: int = 0           # requests shed at admission (SLO)
 
     @property
     def total(self) -> int:
@@ -291,11 +294,14 @@ class ServeLog:
 
     def record(self, tick: int, replica: int, admitted: int, tokens: int,
                bytes_per_hop: Sequence[int] = (), bytes_sync: int = 0,
-               rerouted: int = 0) -> None:
+               rerouted: int = 0, drafted: int = 0, accepted: int = 0,
+               rejected: int = 0) -> None:
         self.ticks.append(ServeTick(int(tick), int(replica), int(admitted),
                                     int(tokens),
                                     tuple(int(b) for b in bytes_per_hop),
-                                    int(bytes_sync), int(rerouted)))
+                                    int(bytes_sync), int(rerouted),
+                                    int(drafted), int(accepted),
+                                    int(rejected)))
 
     @property
     def total_bytes(self) -> int:
@@ -325,6 +331,14 @@ class ServeLog:
             vals = [t.bytes_per_hop[h] for t in self.ticks
                     if len(t.bytes_per_hop) > h]
             out[f"hop{h}_MB"] = float(np.sum(vals)) / 1e6
+        drafted = float(np.sum([t.drafted for t in self.ticks]))
+        if drafted > 0:
+            out["drafted"] = drafted
+            out["accepted"] = float(np.sum([t.accepted for t in self.ticks]))
+            out["acceptance"] = out["accepted"] / drafted
+        rejected = float(np.sum([t.rejected for t in self.ticks]))
+        if rejected > 0:
+            out["rejected"] = rejected
         return out
 
 
@@ -333,6 +347,18 @@ def serve_hop_bytes(tokens: int, d_model: int, itemsize: int,
     """Split-mode activation traffic: each decoded (or prefilled) token
     ships one (d_model,) activation across every hop crossing."""
     return tuple(tokens * d_model * itemsize for _ in range(num_hops))
+
+
+def paged_pool_bytes(num_blocks: int, block_size: int, kv_heads: int,
+                     head_dim: int, itemsize: int,
+                     paged_layers: int) -> int:
+    """Device bytes of a paged KV pool: per paged (global-attention) layer,
+    K + V pools of (num_blocks, block_size, kv_heads, head_dim) plus the
+    int32 per-entry position pool used for validity masking.  Contrast
+    with the contiguous footprint ``slots · max_len`` per layer — paging
+    wins whenever the pool undersubscribes full residency."""
+    per_block = block_size * kv_heads * head_dim * itemsize
+    return paged_layers * num_blocks * (2 * per_block + block_size * 4)
 
 
 def reroute_sync_bytes(prompt_len: int, replay_len: int,

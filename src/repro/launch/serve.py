@@ -20,6 +20,7 @@ activation bytes accounted).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -68,6 +69,19 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--scenario", default="clean")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged KV block size in tokens (0 = contiguous)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="paged KV pool size (0 = full residency)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="self-drafting speculative decode (greedy only)")
+    ap.add_argument("--draft-k", type=int, default=4)
+    ap.add_argument("--deadline-slack", type=float, default=0.0,
+                    help="attach deadline = arrival + ideal_latency x slack "
+                         "to every request (0 = no SLOs)")
+    ap.add_argument("--autoscale-max", type=int, default=0,
+                    help="replica ceiling for queue-driven autoscaling "
+                         "(0 = fixed fleet)")
     args = ap.parse_args()
     if args.cuts and args.mode != "split":
         ap.error("--cuts only takes effect with --mode split")
@@ -85,14 +99,25 @@ def main() -> None:
 
     if args.requests > 0:
         sc = get_scenario(args.scenario)
+        margin = max(args.chunk, args.draft_k if args.speculate else 0)
+        max_len = args.prompt_len + args.gen + margin
+        if args.block_size:
+            max_len += (-max_len) % args.block_size   # round to a block
         sp = ServeParams(replicas=args.replicas, slots=args.slots,
-                         chunk=args.chunk,
-                         max_len=args.prompt_len + args.gen + args.chunk,
-                         seed=args.seed)
+                         chunk=args.chunk, max_len=max_len,
+                         seed=args.seed, block_size=args.block_size,
+                         pool_blocks=args.pool_blocks,
+                         speculate=args.speculate, draft_k=args.draft_k,
+                         autoscale_max=args.autoscale_max)
         server = FaultRoutedServer(engine, params, sp, scenario=sc)
         reqs = synthetic_requests(cfg, args.requests,
                                   prompt_len=args.prompt_len, gen=args.gen,
                                   seed=args.seed)
+        if args.deadline_slack > 0:
+            reqs = [dataclasses.replace(
+                r, deadline=r.arrival + (r.prompt_len * sp.prefill_unit
+                                         + r.max_new) * args.deadline_slack)
+                    for r in reqs]
         t0 = time.time()
         report = server.run(reqs)
         dt = time.time() - t0
@@ -102,11 +127,24 @@ def main() -> None:
               f"{report.tokens_out} tokens in {dt:.2f}s wall "
               f"({report.tokens_out / max(dt, 1e-9):.1f} tok/s), "
               f"sim_time={report.sim_time:.0f} ticks={report.ticks} "
-              f"reroutes={report.reroutes}")
+              f"reroutes={report.reroutes} rejected={len(report.rejected)} "
+              f"peak_replicas={report.peak_replicas}")
         print(f"latency p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
               f"p99={pct['p99']:.1f} (decode-step units)  "
               f"compiles: decode={report.decode_compiles} "
-              f"prefill={report.prefill_compiles}")
+              f"prefill={report.prefill_compiles} "
+              f"draft={report.draft_compiles} "
+              f"verify={report.verify_compiles}")
+        if report.drafted:
+            print(f"speculative: {report.spec_rounds} rounds, "
+                  f"acceptance {report.acceptance:.2f} "
+                  f"({report.accepted}/{report.drafted} drafts)")
+        if report.slo and args.deadline_slack > 0:
+            print("slo:", report.slo)
+        if report.unfinished:
+            print(f"WARNING: max_ticks={sp.max_ticks} hit with "
+                  f"{report.unfinished} requests unfinished — the trace "
+                  f"was truncated, not drained")
         print("log:", report.log.summary())
         return
 

@@ -516,6 +516,86 @@ def prefill_attention(cfg: ModelConfig, p: Params, x: jax.Array,
     return y, cache
 
 
+def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                        dtype) -> Params:
+    """Pooled (paged) KV storage for global-attention layers.
+
+    Instead of a private ``(B, max_len)`` region per decode slot, the pool
+    holds ``num_blocks`` blocks of ``block_size`` entries shared by every
+    slot; a per-slot block table (held by the engine's ``BatchState``) maps
+    logical block ``pos // block_size`` to a pool block.  ``ppos`` mirrors
+    the contiguous cache's per-entry absolute position (-1 = empty) so the
+    decode-side validity mask is unchanged after the gather.
+    """
+    shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "pk": jnp.zeros(shape, dtype),
+        "pv": jnp.zeros(shape, dtype),
+        "ppos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+    }
+
+
+def paged_decode_attention(cfg: ModelConfig, p: Params, x: jax.Array,
+                           cache: Params, pos: jax.Array,
+                           table: jax.Array) -> Tuple[jax.Array, Params]:
+    """One-token attention against a paged (pooled) global KV cache.
+
+    ``table`` is ``(B, nb)`` int32 mapping each row's logical blocks to pool
+    blocks, in logical order, with ``nb * block_size == max_len``.  Unmapped
+    logical blocks point at the row's scratch block, so the gathered
+    ``(B, nb * block_size)`` view is value-identical to the contiguous
+    ``(B, max_len)`` cache for live rows — the masked softmax that follows
+    is the same XLA computation and the result is bit-for-bit equal.
+
+    Paged layers are always effectively global (``window is None``): local
+    ring layers already bound their cache at ``window`` entries and gain
+    nothing from paging.
+    """
+    b = x.shape[0]
+    dtype = x.dtype
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = jnp.broadcast_to(pos, (b,))
+    positions = pos_b[:, None]
+    if cfg.rope_kind == "mrope":
+        positions = positions[..., None].repeat(3, axis=-1)
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(dtype), k + p["bk"].astype(dtype), v + p["bv"].astype(dtype)
+    q = apply_rope(cfg, q, positions)
+    k = apply_rope(cfg, k, positions)
+    bs = cache["pk"].shape[1]
+    nb = table.shape[1]
+    rows = jnp.arange(b)
+    # physical write target: distinct across live rows (slots own disjoint
+    # blocks; scratch block b appears only in row b's table)
+    phys = table[rows, (pos_b // bs) % nb]
+    off = pos_b % bs
+    cache = {
+        "pk": cache["pk"].at[phys, off].set(k[:, 0]),
+        "pv": cache["pv"].at[phys, off].set(v[:, 0]),
+        "ppos": cache["ppos"].at[phys, off].set(pos_b),
+    }
+    # gather the logical view: table rows are in logical order, so entry
+    # (b, l) of the view is absolute position l — same layout as contiguous
+    kc = cache["pk"][table].reshape(b, nb * bs, cfg.num_kv_heads, cfg.head_dim)
+    vc = cache["pv"][table].reshape(b, nb * bs, cfg.num_kv_heads, cfg.head_dim)
+    pc = cache["ppos"][table].reshape(b, nb * bs)
+    kc = shard_activation(kc, "batch", "kv_seq", "kv_heads", None)
+    vc = shard_activation(vc, "batch", "kv_seq", "kv_heads", None)
+    qg = _group(cfg, q)  # (B,1,K,G,hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc) * _scale(cfg)
+    s = softcap(s, cfg.attn_logit_softcap)
+    valid = (pc >= 0) & (pc <= pos_b[:, None])           # (B, nb*bs)
+    s = jnp.where(valid[:, None, None, None, :], s.astype(jnp.float32), NEG_INF)
+    s = shard_activation(s, "batch", "kv_heads", None, None, "kv_seq")
+    pr = jax.nn.softmax(s, axis=-1).astype(dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", pr, vc).reshape(q.shape)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dtype))
+    return y, cache
+
+
 def decode_attention(cfg: ModelConfig, p: Params, x: jax.Array,
                      cache: Params, pos: jax.Array, *,
                      window: Optional[int]) -> Tuple[jax.Array, Params]:

@@ -654,11 +654,16 @@ def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
 
 def _layer_cache_init(cfg: ModelConfig, spec: LayerSpec, batch: int,
                       max_len: int, dtype,
-                      decode_window_override: Optional[int]) -> Params:
+                      decode_window_override: Optional[int],
+                      paged: Optional[Tuple[int, int]] = None) -> Params:
     if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
         window = spec.window
         if spec.mixer == ATTN_GLOBAL and decode_window_override:
             window = decode_window_override
+        if paged is not None and window is None:
+            # only effectively-global layers page: local rings are already
+            # bounded at `window` entries and gain nothing from a pool
+            return attn.init_paged_kv_cache(cfg, paged[0], paged[1], dtype)
         return attn.init_kv_cache(cfg, batch, max_len, window, dtype)
     if spec.mixer == MIX_SSM:
         return ssm_mod.init_ssm_cache(cfg, batch, dtype)
@@ -674,20 +679,27 @@ def _layer_cache_axes(spec: LayerSpec):
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
-               decode_window_override: Optional[int] = None) -> Params:
-    """Cache pytree matching the stack/rem layout."""
+               decode_window_override: Optional[int] = None,
+               paged: Optional[Tuple[int, int]] = None) -> Params:
+    """Cache pytree matching the stack/rem layout.
+
+    ``paged=(num_blocks, block_size)`` pools the global-attention layers'
+    KV into a shared block pool (see attention.init_paged_kv_cache); the
+    decode entry points then need a ``table`` mapping rows to blocks.
+    """
     dtype = jnp.dtype(cfg.dtype)
     period_specs, n_full, n_rem = _superblock_layout(cfg)
     stack = []
     for spec in period_specs:
         one = _layer_cache_init(cfg, spec, batch, max_len, dtype,
-                                decode_window_override)
+                                decode_window_override, paged)
         stacked = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_full,) + a.shape), one)
         stack.append(stacked)
     all_specs = cfg.layer_specs()
     rem = [_layer_cache_init(cfg, all_specs[n_full * len(period_specs) + i],
-                             batch, max_len, dtype, decode_window_override)
+                             batch, max_len, dtype, decode_window_override,
+                             paged)
            for i in range(n_rem)]
     return {"stack": stack, "rem": rem}
 
@@ -707,14 +719,19 @@ def cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
 
 def _decode_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
                   cache: Params, pos: jax.Array,
-                  decode_window_override: Optional[int]) -> Tuple[jax.Array, Params]:
+                  decode_window_override: Optional[int],
+                  table: Optional[jax.Array] = None) -> Tuple[jax.Array, Params]:
     h = apply_norm(cfg, p["norm1"], x)
     if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
-        window = spec.window
-        if spec.mixer == ATTN_GLOBAL and decode_window_override:
-            window = decode_window_override
-        mixed, cache = attn.decode_attention(cfg, p["mixer"], h, cache, pos,
-                                             window=window)
+        if "pk" in cache:
+            mixed, cache = attn.paged_decode_attention(cfg, p["mixer"], h,
+                                                       cache, pos, table)
+        else:
+            window = spec.window
+            if spec.mixer == ATTN_GLOBAL and decode_window_override:
+                window = decode_window_override
+            mixed, cache = attn.decode_attention(cfg, p["mixer"], h, cache,
+                                                 pos, window=window)
     elif spec.mixer == MIX_SSM:
         mixed, cache = ssm_mod.decode_ssm(cfg, p["mixer"], h, cache)
     else:
@@ -732,9 +749,13 @@ def _decode_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
 
 def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
                 cache: Params, pos: jax.Array, *,
-                decode_window_override: Optional[int] = None
+                decode_window_override: Optional[int] = None,
+                table: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Params]:
-    """One decode step.  tokens: (B, 1) -> (logits (B,1,V), new cache)."""
+    """One decode step.  tokens: (B, 1) -> (logits (B,1,V), new cache).
+
+    ``table`` is the ``(B, nb)`` block table for paged caches (see
+    :func:`init_cache`); contiguous caches ignore it."""
     x = _embed(cfg, params, tokens, None)
     period_specs, n_full, _ = _superblock_layout(cfg)
 
@@ -743,7 +764,7 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
         new_c = []
         for j, spec in enumerate(period_specs):
             x, cj = _decode_layer(cfg, spec, bp[j], x, bc[j], pos,
-                                  decode_window_override)
+                                  decode_window_override, table)
             new_c.append(cj)
         return x, new_c
 
@@ -758,12 +779,26 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
     for i, lp in enumerate(params["rem"]):
         spec = all_specs[n_full * len(period_specs) + i]
         x, c = _decode_layer(cfg, spec, lp, x, cache["rem"][i], pos,
-                             decode_window_override)
+                             decode_window_override, table)
         new_rem.append(c)
 
     x = apply_norm(cfg, params["final_norm"], x)
     logits = _unembed(cfg, params, x)
     return logits, {"stack": new_stack, "rem": new_rem}
+
+
+def early_exit_logits(params: Params, cfg: ModelConfig, x: jax.Array
+                      ) -> jax.Array:
+    """Self-drafting readout: apply the final norm + unembedding to a
+    mid-stack hop activation ``(B, 1, D)``.
+
+    This is the draft model the WSSL partition gives us for free — the
+    client stage truncated at its cut, read out through the (shared) output
+    head.  ``params`` is the full tree (it holds ``final_norm`` and the tied
+    embedding / head); in a deployed split the client keeps a one-time copy
+    of those readout params, which is a weight sync, not per-token traffic.
+    """
+    return _unembed(cfg, params, apply_norm(cfg, params["final_norm"], x))
 
 
 def partition_cache(cache: Params, cfg: ModelConfig, cuts: Sequence[int]
@@ -795,7 +830,8 @@ def join_cache_stages(stages: Sequence[Params]) -> Params:
 def stage_decode_step(stage_params: Params, cfg: ModelConfig, x: jax.Array,
                       cache: Params, pos: jax.Array, stage_index: int,
                       num_stages: int, *,
-                      decode_window_override: Optional[int] = None
+                      decode_window_override: Optional[int] = None,
+                      table: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, Params]:
     """One decode step through a single pipeline stage.
 
@@ -815,7 +851,7 @@ def stage_decode_step(stage_params: Params, cfg: ModelConfig, x: jax.Array,
         new_c = []
         for j, spec in enumerate(period_specs):
             x, cj = _decode_layer(cfg, spec, bp[j], x, bc[j], pos,
-                                  decode_window_override)
+                                  decode_window_override, table)
             new_c.append(cj)
         return x, new_c
 
@@ -834,7 +870,7 @@ def stage_decode_step(stage_params: Params, cfg: ModelConfig, x: jax.Array,
         for i, lp in enumerate(rem):
             spec = all_specs[n_rem_start + i]
             x, c = _decode_layer(cfg, spec, lp, x, cache["rem"][i], pos,
-                                 decode_window_override)
+                                 decode_window_override, table)
             new_rem.append(c)
         new_cache["rem"] = new_rem
         x = apply_norm(cfg, stage_params["final_norm"], x)
@@ -845,7 +881,8 @@ def stage_decode_step(stage_params: Params, cfg: ModelConfig, x: jax.Array,
 def split_decode_step(stages: Sequence[Params], cfg: ModelConfig,
                       tokens: jax.Array, cache_stages: Sequence[Params],
                       pos: jax.Array, *,
-                      decode_window_override: Optional[int] = None
+                      decode_window_override: Optional[int] = None,
+                      table: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, List[Params]]:
     """One decode step through the full client→edge→server pipeline:
     :func:`decode_step` with the params *and* cache partitioned at the WSSL
@@ -854,7 +891,8 @@ def split_decode_step(stages: Sequence[Params], cfg: ModelConfig,
     new_caches: List[Params] = []
     for i, (sp, sc) in enumerate(zip(stages, cache_stages)):
         x, nc = stage_decode_step(sp, cfg, x, sc, pos, i, len(stages),
-                                  decode_window_override=decode_window_override)
+                                  decode_window_override=decode_window_override,
+                                  table=table)
         new_caches.append(nc)
     return x, new_caches
 

@@ -6,29 +6,43 @@ Refactors the decode path (formerly a host-side Python loop in
 * :mod:`repro.serve.engine`    — ``DecodeEngine``: one ``lax.scan``-fused
   decode executable per (arch, batch, chunk) shape, AOT-compiled once and
   reused across requests, scenarios, and replicas; merged-model and
-  ``split`` (client→edge→server) modes share the discipline.
-* :mod:`repro.serve.scheduler` — request queue + continuous-batching slot
-  admission (per-request lengths via per-slot positions and forced-token
-  replay, so mixed prompt/gen lengths share one executable).
+  ``split`` (client→edge→server) modes share the discipline.  Paged KV
+  (block-pool global attention) and self-drafting speculative decode
+  (client-stage drafts, one fused verify chunk) ride the same
+  executables-per-shape discipline.
+* :mod:`repro.serve.blocks`    — ``BlockAllocator``: the O(free) free-list
+  block pool behind paged KV slots.
+* :mod:`repro.serve.scheduler` — EDF request queue + continuous-batching
+  slot admission (per-request lengths via per-slot positions and
+  forced-token replay, so mixed prompt/gen lengths share one executable);
+  optional block reservation at admission.
 * :mod:`repro.serve.router`    — R serving replicas (the ``i % R`` routing
   idiom from ``core/split.py``) driven through ``repro.sim`` scenarios:
   dropped replica ⇒ re-route + re-prefill (sync bytes), slow host ⇒
-  latency inflation via ``sim.faults.client_latencies``.
-* :mod:`repro.serve.metrics`   — p50/p95/p99 tail latency and
-  degraded-mode output-agreement metrics.
+  latency inflation, provably-late work ⇒ shed with an explicit
+  ``rejected`` outcome, queue pressure ⇒ replica autoscaling.
+* :mod:`repro.serve.metrics`   — p50/p95/p99 tail latency, SLO
+  attainment, speculative acceptance, degraded-mode output agreement.
+* :mod:`repro.serve.trace`     — ``SimEngine`` (model-free engine for
+  million-request routing experiments) + ``bursty_trace`` workloads.
 
 See docs/serving.md.
 """
 
+from repro.serve.blocks import BlockAllocator
 from repro.serve.engine import BatchState, DecodeEngine, get_engine
-from repro.serve.metrics import latency_percentiles, output_agreement
+from repro.serve.metrics import (acceptance_rate, latency_percentiles,
+                                 output_agreement, slo_attainment)
 from repro.serve.router import FaultRoutedServer, ServeParams, ServeReport
 from repro.serve.scheduler import (PendingWork, Request, SlotScheduler,
                                    synthetic_requests)
+from repro.serve.trace import SimConfig, SimEngine, bursty_trace
 
 __all__ = [
-    "BatchState", "DecodeEngine", "get_engine",
-    "latency_percentiles", "output_agreement",
+    "BatchState", "BlockAllocator", "DecodeEngine", "get_engine",
+    "acceptance_rate", "latency_percentiles", "output_agreement",
+    "slo_attainment",
     "FaultRoutedServer", "ServeParams", "ServeReport",
     "PendingWork", "Request", "SlotScheduler", "synthetic_requests",
+    "SimConfig", "SimEngine", "bursty_trace",
 ]

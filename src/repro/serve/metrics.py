@@ -12,6 +12,7 @@ fault path, not noise.
 
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Mapping, Sequence
 
 import numpy as np
@@ -30,6 +31,41 @@ def latency_percentiles(latencies: Sequence[float]) -> Dict[str, float]:
         "mean": float(arr.mean()),
         "max": float(arr.max()),
     }
+
+
+def acceptance_rate(accepted: int, drafted: int) -> float:
+    """Fraction of self-drafted tokens the full-pipeline verifier accepted.
+    1.0 means the client-stage draft head always agreed with the pipeline;
+    0.0 means every round fell back to the single verified token."""
+    return float(accepted) / float(drafted) if drafted else 0.0
+
+
+def slo_attainment(deadlines: Mapping[int, float],
+                   completions: Mapping[int, float]) -> Dict[str, float]:
+    """SLO accounting over the requests that carried a *finite* deadline.
+
+    * ``attainment`` — fraction completed at or before their deadline.
+    * ``on_time`` / ``late`` / ``missed`` — counts; a request absent from
+      ``completions`` (shed at admission, or unfinished at ``max_ticks``)
+      counts as missed.
+
+    Deadline-less (``inf``) requests are excluded: with no SLO there is
+    nothing to attain, and counting them would inflate attainment."""
+    finite = {rid: d for rid, d in deadlines.items() if math.isfinite(d)}
+    if not finite:
+        return {"attainment": 1.0, "on_time": 0.0, "late": 0.0,
+                "missed": 0.0}
+    on_time = late = missed = 0
+    for rid, d in finite.items():
+        t = completions.get(rid)
+        if t is None:
+            missed += 1
+        elif t <= d:
+            on_time += 1
+        else:
+            late += 1
+    return {"attainment": on_time / len(finite), "on_time": float(on_time),
+            "late": float(late), "missed": float(missed)}
 
 
 def output_agreement(reference: Mapping[int, List[int]],

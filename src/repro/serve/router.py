@@ -1,4 +1,5 @@
-"""Fault-aware replica routing, driven by ``repro.sim`` scenarios.
+"""Fault-aware, SLO-aware replica routing, driven by ``repro.sim``
+scenarios.
 
 R serving replicas hold identical (synced) params and share the engine's
 compiled executables; request ``rid`` homes to replica ``rid % R`` — the
@@ -11,7 +12,7 @@ scenario's "clients" are the replicas):
   queued requests re-route to the next alive replica, where they are
   re-prefilled and their credited tokens replayed (traffic accounted as
   sync bytes, like a training-side resync).  The replica restarts with an
-  empty cache.
+  empty cache (paged mode: its block pool resets wholesale).
 * ``client_latencies(plan, R)[r] > 1`` — replica r is a slow host: every
   chunk (and prefill) it serves takes proportionally longer on the
   simulated clock, inflating its requests' latencies.
@@ -23,13 +24,26 @@ of the one-executable training rounds.
 The simulated clock is measured in clean decode-step units: a chunk of T
 tokens costs T × slowdown; prefilling an L-token prompt costs
 L × ``prefill_unit`` × slowdown (prefill parallelism makes per-token
-prefill cheaper than decode).  Request latency = completion − arrival.
+prefill cheaper than decode).  A speculative round of K drafts costs
+K × (draft_fraction + prefill_unit) × slowdown: K client-stage draft
+steps plus one fused verify chunk that enjoys the same parallelism as
+prefill.  Request latency = completion − arrival.
+
+SLO semantics (``Request.deadline``, absolute sim time): the per-replica
+queue is EDF; at admission the router sheds work that is **provably**
+late — even the optimistic lower bound (no faults, best-case speculative
+cost) lands past the deadline — recording it in ``ServeReport.rejected``
+instead of burning slots on it.  Deadline-less requests are never shed.
+With ``autoscale_max > 0`` the live replica count grows when queues build
+past ``scale_up_queue`` per replica and shrinks from the top when spare
+replicas idle — capacity follows the ``repro.sim`` load scenario.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +52,10 @@ import numpy as np
 from repro.config import Scenario
 from repro.core.protocol import (ServeLog, reroute_sync_bytes,
                                  serve_hop_bytes)
-from repro.serve.engine import BatchState, DecodeEngine
-from repro.serve.metrics import latency_percentiles
+from repro.serve.blocks import BlockAllocator
+from repro.serve.engine import BatchState
+from repro.serve.metrics import (acceptance_rate, latency_percentiles,
+                                 slo_attainment)
 from repro.serve.scheduler import PendingWork, Request, SlotScheduler
 from repro.sim import faults
 
@@ -58,6 +74,18 @@ class ServeParams:
     temperature: float = 0.0
     max_ticks: int = 100_000
     seed: int = 0
+    # paged KV (0 = contiguous full residency, the classic layout)
+    block_size: int = 0         # pool block size in tokens
+    pool_blocks: int = 0        # pool size (0 = full residency + scratch)
+    # self-drafting speculative decode (greedy only)
+    speculate: bool = False
+    draft_k: int = 4            # drafts per speculative round
+    # SLO-aware autoscaling (0 = fixed fleet)
+    autoscale_max: int = 0      # replica ceiling (>= replicas to enable)
+    scale_up_queue: int = 8     # queued-per-live-replica trigger
+    scale_down_idle: int = 4    # idle ticks before the top replica parks
+    # large traces: drop per-request token streams, keep only metrics
+    keep_outputs: bool = True
 
 
 @dataclasses.dataclass
@@ -74,16 +102,34 @@ class ServeReport:
     reroutes: int
     decode_compiles: int
     prefill_compiles: int
+    # SLO plane
+    completions: Dict[int, float] = dataclasses.field(default_factory=dict)
+    rejected: Dict[int, float] = dataclasses.field(default_factory=dict)
+    slo: Dict[str, float] = dataclasses.field(default_factory=dict)
+    unfinished: int = 0         # still pending/active when max_ticks hit
+    # speculative plane
+    drafted: int = 0
+    accepted: int = 0
+    spec_rounds: int = 0
+    draft_compiles: int = 0
+    verify_compiles: int = 0
+    # router internals (asserted in tests/benchmarks)
+    arrival_scans: int = 0      # O(n + ticks), not O(n·ticks)
+    peak_replicas: int = 0
 
     @property
     def tokens_out(self) -> int:
         return sum(len(v) for v in self.outputs.values())
 
+    @property
+    def acceptance(self) -> float:
+        return acceptance_rate(self.accepted, self.drafted)
+
 
 class FaultRoutedServer:
     """Serve a request set across R fault-injected replicas."""
 
-    def __init__(self, engine: DecodeEngine, params: Params,
+    def __init__(self, engine, params: Params,
                  serve: ServeParams = ServeParams(),
                  scenario: Optional[Scenario] = None):
         self.engine = engine
@@ -93,95 +139,181 @@ class FaultRoutedServer:
 
     # -- helpers -----------------------------------------------------------
 
-    def _next_alive(self, home: int, keep: np.ndarray) -> int:
-        """First alive replica at or after ``home`` (mod R); if every
-        replica is down this tick, stay home — the work waits there."""
-        r_count = self.p.replicas
-        for d in range(r_count):
-            r = (home + d) % r_count
+    def _next_alive(self, home: int, keep: np.ndarray, r_live: int) -> int:
+        """First alive replica at or after ``home`` (mod the live count);
+        if every replica is down this tick, stay home — the work waits."""
+        for d in range(r_live):
+            r = (home + d) % r_live
             if keep[r] > 0:
                 return r
         return home
 
+    def _mk_sched(self) -> SlotScheduler:
+        p = self.p
+        if not p.block_size:
+            return SlotScheduler(p.slots)
+        nb = p.max_len // p.block_size
+        pool = p.pool_blocks or p.slots * (nb + 1)
+        margin = max(p.chunk, p.draft_k if p.speculate else 0)
+        return SlotScheduler(
+            p.slots,
+            allocator=BlockAllocator(pool, p.block_size, reserved=p.slots),
+            reserve_margin=margin, max_reserve=p.max_len)
+
+    def _new_state(self) -> BatchState:
+        p = self.p
+        if not p.block_size:
+            return self.engine.new_batch_state(p.slots, p.max_len)
+        nb = p.max_len // p.block_size
+        return self.engine.new_batch_state(
+            p.slots, p.max_len, block_size=p.block_size,
+            pool_blocks=p.pool_blocks or p.slots * (nb + 1))
+
     # -- main loop ---------------------------------------------------------
 
-    def run(self, requests: Sequence[Request]) -> ServeReport:
+    def run(self, requests: Sequence[Request], *,
+            preloaded: Optional[Sequence[Tuple[int, PendingWork]]] = None
+            ) -> ServeReport:
         p, engine = self.p, self.engine
-        r_count = p.replicas
-        scheds = [SlotScheduler(p.slots) for _ in range(r_count)]
-        states: List[Optional[BatchState]] = [None] * r_count
-        busy_until = [0.0] * r_count
+        r_base = p.replicas
+        r_max = max(r_base, p.autoscale_max)
+        r_live = r_base
+        peak_replicas = r_base
+        scheds = [self._mk_sched() for _ in range(r_max)]
+        states: List[Optional[BatchState]] = [None] * r_max
+        busy_until = [0.0] * r_max
+        idle_ticks = [0] * r_max
         outputs: Dict[int, List[int]] = {}
         latencies: Dict[int, float] = {}
+        completions: Dict[int, float] = {}
+        rejected: Dict[int, float] = {}
+        deadlines: Dict[int, float] = {}
         log = ServeLog()
-        itemsize = jnp.dtype(self.engine.cfg.dtype).itemsize
-        d_model = self.engine.cfg.d_model
-        num_hops = self.engine.num_hops
+        itemsize = jnp.dtype(engine.cfg.dtype).itemsize
+        d_model = engine.cfg.d_model
+        num_hops = engine.num_hops
 
         sp = faults.scenario_params(self.scenario)
         plan_rng = jax.random.PRNGKey(p.seed)
         decode_rng = jax.random.PRNGKey(p.seed + 1)
 
+        # speculation only below the greedy/temperature fork, and only on
+        # engines that implement it (SimEngine does; a hypothetical
+        # third-party engine might not)
+        spec_ok = (p.speculate and p.temperature == 0.0
+                   and hasattr(engine, "spec_chunk"))
+        margin = max(p.chunk, p.draft_k if spec_ok else 0)
+        # optimistic per-token decode cost: the shed predicate must be a
+        # true lower bound, so a rejection is *provably* late
+        cost_lb = (min(1.0, engine.draft_fraction + p.prefill_unit)
+                   if spec_ok else 1.0)
+
         for req in requests:
-            if req.prompt_len + req.max_new + p.chunk > p.max_len:
+            if req.prompt_len + req.max_new + margin > p.max_len:
                 raise ValueError(
                     f"request {req.rid}: prompt_len ({req.prompt_len}) + "
-                    f"max_new ({req.max_new}) + chunk ({p.chunk}) exceeds "
-                    f"max_len ({p.max_len}); global KV entries would wrap "
-                    f"and silently overwrite the prompt")
+                    f"max_new ({req.max_new}) + chunk margin ({margin}) "
+                    f"exceeds max_len ({p.max_len}); global KV entries "
+                    f"would wrap and silently overwrite the prompt")
+            if math.isfinite(req.deadline):
+                deadlines[req.rid] = req.deadline
+
+        # arrivals walk an index into the sorted list — popping the head of
+        # a python list is O(n) per arrival, O(n²) per trace (bugfix)
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        next_arrival = 0
+        arrival_scans = 0
+
+        if preloaded:
+            for home, work in preloaded:
+                scheds[home % r_live].submit(work)
+                if math.isfinite(work.req.deadline):
+                    deadlines[work.req.rid] = work.req.deadline
 
         tick = 0
         reroutes = 0
+        drafted_total = accepted_total = spec_rounds = 0
         chunk_time = float(p.chunk)
         while tick < p.max_ticks and (
-                pending or any(s.has_work for s in scheds)):
+                next_arrival < len(pending)
+                or any(s.has_work for s in scheds)):
             now = tick * chunk_time
-            while pending and pending[0].arrival <= now:
-                req = pending.pop(0)
-                scheds[req.rid % r_count].submit(PendingWork(req))
+            while True:
+                arrival_scans += 1
+                if (next_arrival >= len(pending)
+                        or pending[next_arrival].arrival > now):
+                    break
+                req = pending[next_arrival]
+                next_arrival += 1
+                scheds[req.rid % r_live].submit(PendingWork(req))
             if not any(s.has_work for s in scheds):
                 tick += 1                    # idle until the next arrival
                 continue
+
+            # -- autoscale up: queues building past the per-replica trigger
+            # wake a parked replica (it fills via arrivals + re-routes) ----
+            if r_max > r_base:
+                queued = sum(len(s.queue) for s in scheds[:r_live])
+                while (r_live < r_max
+                       and queued > p.scale_up_queue * r_live):
+                    idle_ticks[r_live] = 0
+                    r_live += 1
+                peak_replicas = max(peak_replicas, r_live)
+
+            # the plan is always sampled over the replica *ceiling* so a
+            # fixed fleet (autoscale off) draws identical faults to before
             plan = faults.sample_fault_plan(
-                jax.random.fold_in(plan_rng, tick), sp, r_count)
+                jax.random.fold_in(plan_rng, tick), sp, r_max)
             keep = np.asarray(plan.keep)
-            slowdown = np.asarray(faults.client_latencies(plan, r_count))
+            slowdown = np.asarray(faults.client_latencies(plan, r_max))
 
             # -- replica drops: dump state, re-route (the re-prefill cost
             # is charged when the work is actually re-admitted) -----------
-            for r in range(r_count):
+            for r in range(r_live):
                 if keep[r] > 0 or not scheds[r].has_work:
                     if keep[r] <= 0:
                         states[r] = None     # a down replica loses its cache
                     continue
                 in_flight = scheds[r].num_active
-                moved = scheds[r].drain()
+                moved = scheds[r].drain()    # also resets the block pool
                 states[r] = None
                 busy_until[r] = now
                 for w in moved:
-                    scheds[self._next_alive(w.req.rid % r_count,
-                                            keep)].submit(w)
+                    scheds[self._next_alive(w.req.rid % r_live, keep,
+                                            r_live)].submit(w)
                 reroutes += in_flight
                 if in_flight:
                     log.record(tick, r, 0, 0, rerouted=in_flight)
 
-            # -- alive replicas: admit at slot granularity, decode a chunk -
-            for r in range(r_count):
+            # -- alive replicas: shed provably-late work, admit at slot
+            # granularity (EDF), decode a chunk or a speculative round ----
+            for r in range(r_live):
                 sched = scheds[r]
                 if keep[r] <= 0 or now < busy_until[r] or not sched.has_work:
                     continue
                 if states[r] is None:
-                    states[r] = engine.new_batch_state(p.slots, p.max_len)
+                    states[r] = self._new_state()
                 t_cost = 0.0
                 admitted = 0
                 prefill_tokens = 0
                 bytes_sync = 0
                 tokens_credited = 0
-                for slot, work in sched.admissions():
+                tick_drafted = tick_accepted = 0
+
+                def shed(work: PendingWork) -> bool:
+                    if not math.isfinite(work.req.deadline):
+                        return False
+                    already = len(work.done) - 1 if work.done else 0
+                    rem = max(work.req.max_new - 1 - already, 0)
+                    lb = (now + work.req.prompt_len * p.prefill_unit
+                          + rem * cost_lb)
+                    return lb > work.req.deadline
+
+                for slot, work in sched.admissions(shed=shed):
                     fresh = not work.done
                     tok0 = engine.admit(states[r], self.params,
-                                        work.req.prompt, slot)
+                                        work.req.prompt, slot,
+                                        blocks=work.blocks)
                     sched.activate(slot, work, tok0)
                     t_cost += work.req.prompt_len * p.prefill_unit
                     prefill_tokens += work.req.prompt_len
@@ -192,33 +324,83 @@ class FaultRoutedServer:
                         # prompt + credited tokens were re-shipped here
                         bytes_sync += reroute_sync_bytes(
                             work.req.prompt_len, len(work.done) - 1)
+                tick_rejected = len(sched.shed)
+                for w in sched.shed:
+                    rejected[w.req.rid] = now
+                sched.shed.clear()
+
+                ran_chunk = False
+                tokens_stepped = p.chunk
                 if sched.num_active:
-                    forced, force_len = sched.force_buffers(p.chunk)
-                    rng = jax.random.fold_in(decode_rng,
-                                             tick * r_count + r)
-                    toks = engine.decode_chunk(states[r], self.params,
-                                               forced, force_len, rng,
-                                               p.temperature)
-                    t_cost += chunk_time
+                    ran_chunk = True
+                    replaying = any(s.replay for _, s in sched.active())
+                    if spec_ok and not replaying:
+                        toks, acc, cnt = engine.spec_chunk(
+                            states[r], self.params, p.draft_k)
+                        active_rows = [i for i, _ in sched.active()]
+                        tick_drafted = p.draft_k * len(active_rows)
+                        tick_accepted = int(sum(int(acc[i])
+                                                for i in active_rows))
+                        spec_rounds += 1
+                        tokens_stepped = p.draft_k
+                        t_cost += p.draft_k * (engine.draft_fraction
+                                               + p.prefill_unit)
+                        finished, step_credited = sched.credit_spec(
+                            toks, cnt)
+                    else:
+                        forced, force_len = sched.force_buffers(p.chunk)
+                        rng = jax.random.fold_in(decode_rng,
+                                                 tick * r_max + r)
+                        toks = engine.decode_chunk(states[r], self.params,
+                                                   forced, force_len, rng,
+                                                   p.temperature)
+                        t_cost += chunk_time
+                        finished, step_credited = sched.credit_chunk(toks)
                     end = now + t_cost * float(slowdown[r])
-                    finished, chunk_credited = sched.credit_chunk(toks)
-                    tokens_credited += chunk_credited
+                    tokens_credited += step_credited
+                    drafted_total += tick_drafted
+                    accepted_total += tick_accepted
                     for slot, active in finished:
                         rid = active.req.rid
-                        outputs[rid] = list(active.done)
+                        if p.keep_outputs:
+                            outputs[rid] = list(active.done)
+                        completions[rid] = end
                         latencies[rid] = end - active.req.arrival
+                        if (states[r] is not None
+                                and states[r].table is not None):
+                            # point the released row back at its scratch
+                            # block before the allocator reuses the blocks
+                            states[r].table[slot, :] = slot
                         sched.release(slot)
                     busy_until[r] = end
                 # every decode step ships the whole batch across each hop
                 # (garbage slots included — that is the physical crossing);
-                # admissions re-cross their prompt activations too
-                hop_tokens = (p.slots * p.chunk if sched.num_active or
-                              tokens_credited else 0) + prefill_tokens
+                # admissions re-cross their prompt activations too.  Gate
+                # on "a chunk actually ran", not on post-release occupancy:
+                # a final chunk whose slots all finish still crossed the
+                # wire (bugfix — the old gate dropped fully-replayed final
+                # chunks, which credit zero tokens and empty every slot)
+                hop_tokens = (p.slots * tokens_stepped if ran_chunk
+                              else 0) + prefill_tokens
                 log.record(tick, r, admitted, tokens_credited,
                            bytes_per_hop=serve_hop_bytes(
                                hop_tokens, d_model, itemsize, num_hops),
-                           bytes_sync=bytes_sync)
+                           bytes_sync=bytes_sync, drafted=tick_drafted,
+                           accepted=tick_accepted, rejected=tick_rejected)
+
+            # -- autoscale down: park the top replica once it has idled ---
+            for r in range(r_live):
+                idle_ticks[r] = 0 if scheds[r].has_work else idle_ticks[r] + 1
+            while (r_live > r_base and not scheds[r_live - 1].has_work
+                   and idle_ticks[r_live - 1] >= p.scale_down_idle):
+                states[r_live - 1] = None
+                r_live -= 1
             tick += 1
+
+        # bugfix: a max_ticks exit used to look identical to a clean drain
+        # — report what was silently truncated instead
+        unfinished = (len(pending) - next_arrival) + sum(
+            len(s.queue) + s.num_active for s in scheds)
 
         return ServeReport(
             scenario=self.scenario.name,
@@ -231,4 +413,15 @@ class FaultRoutedServer:
             reroutes=reroutes,
             decode_compiles=engine.decode_compiles,
             prefill_compiles=engine.prefill_compiles,
+            completions=completions,
+            rejected=rejected,
+            slo=slo_attainment(deadlines, completions),
+            unfinished=unfinished,
+            drafted=drafted_total,
+            accepted=accepted_total,
+            spec_rounds=spec_rounds,
+            draft_compiles=getattr(engine, "draft_compiles", 0),
+            verify_compiles=getattr(engine, "verify_compiles", 0),
+            arrival_scans=arrival_scans,
+            peak_replicas=peak_replicas,
         )

@@ -7,6 +7,16 @@ other slots keep decoding; there is no batch-wide barrier and no
 recompile, because the decode executable's shapes never change (per-slot
 positions carry each request's own depth).
 
+The queue is an **EDF heap** (earliest deadline first, FIFO within equal
+deadlines): deadline-less requests all carry ``deadline = inf`` and the
+heap degrades to the classic FIFO.  An optional shed predicate lets the
+router reject provably-late work at admission time instead of silently
+serving it past its deadline.  With a :class:`~repro.serve.blocks.
+BlockAllocator` attached, admission additionally reserves the request's
+worst-case KV blocks (O(1) free-list check) and blocks head-of-line when
+the pool cannot fit the EDF head — slots stop being the only capacity
+axis.
+
 Admission, completion, and eviction all happen at **chunk boundaries**
 (the engine decodes T tokens per fused call); tokens a request decodes
 past its ``max_new`` inside its final chunk are discarded.  A request
@@ -21,20 +31,23 @@ bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, Iterator, List, Optional, Tuple
+import heapq
+import math
+from typing import Callable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class Request:
-    """One serving request: a prompt and a generation budget."""
+    """One serving request: a prompt, a generation budget, and an optional
+    completion deadline (absolute sim time; ``inf`` = no SLO)."""
 
     rid: int
     prompt: np.ndarray          # (L,) int prompt tokens
     max_new: int                # tokens to generate (incl. the prefill token)
     arrival: float = 0.0        # simulated arrival time
+    deadline: float = math.inf  # absolute completion deadline (SLO)
 
     @property
     def prompt_len(self) -> int:
@@ -45,10 +58,14 @@ class Request:
 class PendingWork:
     """A queued unit of work: a fresh request (``done`` empty) or a
     re-routed one (``done`` carries the tokens already credited on the
-    replica that dropped — they will be replayed, not re-credited)."""
+    replica that dropped — they will be replayed, not re-credited).
+    ``blocks`` are the KV pool blocks reserved at admission (paged mode);
+    ``seq`` preserves FIFO order among equal deadlines in the EDF heap."""
 
     req: Request
     done: List[int] = dataclasses.field(default_factory=list)
+    blocks: Optional[List[int]] = None
+    seq: int = 0
 
 
 @dataclasses.dataclass
@@ -92,18 +109,27 @@ def synthetic_requests(cfg, n: int, *, prompt_len: int, gen: int,
 
 
 class SlotScheduler:
-    """FIFO queue + slot table for one replica."""
+    """EDF queue + slot table for one replica (FIFO when no deadlines)."""
 
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, allocator=None,
+                 reserve_margin: int = 0, max_reserve: int = 0):
         assert num_slots >= 1
         self.num_slots = num_slots
-        self.queue: Deque[PendingWork] = deque()
+        # heap of (deadline, seq, work); len(queue) is the queue depth
+        self.queue: List[Tuple[float, int, PendingWork]] = []
         self.slots: List[Optional[ActiveSlot]] = [None] * num_slots
+        self.allocator = allocator
+        self.reserve_margin = reserve_margin
+        self.max_reserve = max_reserve        # cache length cap (paged mode)
+        self.shed: List[PendingWork] = []
+        self._seq = 0
 
     # -- queue -------------------------------------------------------------
 
     def submit(self, work: PendingWork) -> None:
-        self.queue.append(work)
+        work.seq = self._seq
+        self._seq += 1
+        heapq.heappush(self.queue, (work.req.deadline, work.seq, work))
 
     @property
     def has_work(self) -> bool:
@@ -113,14 +139,47 @@ class SlotScheduler:
     def num_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
-    # -- admission (slot granularity, FIFO) --------------------------------
+    def _tokens_needed(self, req: Request) -> int:
+        """Worst-case KV entries a request can touch: prompt + budget +
+        the chunk/draft overshoot margin, capped at the cache length (a
+        slot's logical address space is max_len entries)."""
+        need = req.prompt_len + req.max_new + self.reserve_margin
+        return min(need, self.max_reserve) if self.max_reserve else need
 
-    def admissions(self) -> Iterator[Tuple[int, PendingWork]]:
-        """Yield (slot, work) pairs filling free slots from the queue.  The
-        caller prefills each admission and then calls :meth:`activate`."""
+    # -- admission (slot granularity, EDF) ---------------------------------
+
+    def admissions(self, shed: Optional[Callable[[PendingWork], bool]] = None
+                   ) -> Iterator[Tuple[int, PendingWork]]:
+        """Yield (slot, work) pairs filling free slots in EDF order.  The
+        caller prefills each admission and then calls :meth:`activate`.
+
+        ``shed(work) == True`` rejects the work instead of admitting it
+        (collected in ``self.shed`` for the router to report).  With an
+        allocator attached, each admission reserves its worst-case blocks
+        first; if the pool cannot fit the EDF head, admission stops —
+        head-of-line blocking is deliberate, so a large early-deadline
+        request is never starved by small late-deadline ones."""
         for i, s in enumerate(self.slots):
-            if s is None and self.queue:
-                yield i, self.queue.popleft()
+            if s is not None:
+                continue
+            work = None
+            while self.queue:
+                _, _, cand = heapq.heappop(self.queue)
+                if shed is not None and shed(cand):
+                    self.shed.append(cand)
+                    continue
+                if self.allocator is not None and cand.blocks is None:
+                    need = self._tokens_needed(cand.req)
+                    if not self.allocator.can_fit(need):
+                        heapq.heappush(self.queue,
+                                       (cand.req.deadline, cand.seq, cand))
+                        break
+                    cand.blocks = self.allocator.allocate(need)
+                work = cand
+                break
+            if work is None:
+                break
+            yield i, work
 
     def activate(self, slot: int, work: PendingWork,
                  first_token: int) -> ActiveSlot:
@@ -143,6 +202,10 @@ class SlotScheduler:
                 yield i, s
 
     def release(self, slot: int) -> None:
+        s = self.slots[slot]
+        if s is not None and self.allocator is not None and s.work.blocks:
+            self.allocator.free(s.work.blocks)
+            s.work.blocks = None
         self.slots[slot] = None
 
     # -- chunk plumbing ----------------------------------------------------
@@ -181,16 +244,40 @@ class SlotScheduler:
                 finished.append((i, s))
         return finished, credited
 
+    def credit_spec(self, tokens: np.ndarray, counts: np.ndarray
+                    ) -> Tuple[List[Tuple[int, ActiveSlot]], int]:
+        """Distribute one speculative round's tokens: slot ``i`` emitted
+        the first ``counts[i]`` entries of ``tokens[i]`` (verified greedy
+        tokens).  The router only speculates when no slot is replaying —
+        the replay lane rides normal chunks."""
+        finished: List[Tuple[int, ActiveSlot]] = []
+        credited = 0
+        for i, s in self.active():
+            assert not s.replay, "speculative rounds never overlap replay"
+            need = s.req.max_new - len(s.done)
+            take = tokens[i, :min(int(counts[i]), need)]
+            s.done.extend(int(t) for t in take)
+            credited += len(take)
+            if s.finished:
+                finished.append((i, s))
+        return finished, credited
+
     # -- fault handling ----------------------------------------------------
 
     def drain(self) -> List[PendingWork]:
         """Dump all state (replica drop): active slots re-enter the world
         as re-routable work carrying their credited tokens; queued work
-        follows untouched.  The scheduler is empty afterwards."""
+        follows in EDF order.  Block reservations die with the replica's
+        pool (the allocator is reset wholesale).  The scheduler is empty
+        afterwards."""
         moved: List[PendingWork] = []
         for i, s in list(self.active()):
             moved.append(s.work)
             self.slots[i] = None
-        moved.extend(self.queue)
-        self.queue.clear()
+        while self.queue:
+            moved.append(heapq.heappop(self.queue)[2])
+        for w in moved:
+            w.blocks = None
+        if self.allocator is not None:
+            self.allocator.reset()
         return moved

@@ -90,6 +90,17 @@ register_scenario(Scenario(name="async-byzantine", sign_flip_fraction=0.25,
 register_scenario(Scenario(name="replica-drop", dropout_prob=0.25))
 register_scenario(Scenario(name="slow-host", straggler_fraction=0.5,
                            straggler_slowdown=4.0))
+# SLO / autoscaling load presets (router ``autoscale_max`` + bursty
+# traces, see serve/trace.py): flash-crowd pairs burst arrivals with a
+# healthy fleet whose slower half makes queueing visible, so autoscaling
+# — not fault recovery — is what absorbs the load; degraded-fleet layers
+# replica crashes ON TOP of slow hosts, the worst case for deadline
+# attainment (shed + reroute + inflate all at once).
+register_scenario(Scenario(name="flash-crowd", straggler_fraction=0.25,
+                           straggler_slowdown=2.0))
+register_scenario(Scenario(name="degraded-fleet", dropout_prob=0.15,
+                           straggler_fraction=0.5,
+                           straggler_slowdown=4.0))
 
 
 def get_scenario(name: str) -> Scenario:
