@@ -63,6 +63,45 @@ def kernel_rows(n: int = 16, m: int = 50_000_000) -> List[str]:
     return rows
 
 
+def paged_attention_rows(arch: str = "gemma3-12b", *, batch: int = 8,
+                         max_len: int = 8192, block_size: int = 16,
+                         occupancy: float = 0.5) -> List[str]:
+    """Analytic roofline rows for the paged-decode attention paths
+    (kernels/paged_attention.py vs the gather fallback), per decoded
+    token at ``occupancy``·max_len average live prefix.
+
+    Both are O(1)-flop-per-byte streaming passes, so the bound is HBM
+    bandwidth and the whole story is bytes moved: the gather path pays
+    3 passes over the full ``nb·bs`` logical view per row (pool read +
+    view write + softmax read) while the kernel streams each live block
+    once and never materializes a view.
+    """
+    from repro.config import get_arch
+    from repro.roofline.analysis import HBM_BW, paged_attention_bytes
+    cfg = get_arch(arch)
+    nb = max_len // block_size
+    live = occupancy * max_len
+    rep = paged_attention_bytes(cfg, block_size=block_size, num_blocks=nb,
+                                live_entries=live, batch=batch)
+    rows = []
+    for name, bytes_total in (("paged_attn_gather", rep["gather_bytes"]),
+                              ("paged_attn_kernel", rep["kernel_bytes"])):
+        t_mem = bytes_total / HBM_BW
+        # ~4 flops per gathered/streamed element (qk dot + pv accumulate)
+        flops = 4 * bytes_total / rep["entry_bytes"] * (
+            2 * cfg.num_kv_heads * cfg.head_dim)
+        rows.append(
+            f"roofline_kernel_{name},0,"
+            f"bytes_GB={bytes_total / 1e9:.3f};"
+            f"ai_flops_per_byte={flops / bytes_total:.3f};"
+            f"t_mem_ms={t_mem * 1e3:.3f};bound=memory")
+    rows.append(
+        f"roofline_kernel_paged_attn_speedup,0,"
+        f"analytic={rep['gather_bytes'] / rep['kernel_bytes']:.2f}x;"
+        f"occupancy={occupancy};paged_layers={rep['paged_layers']}")
+    return rows
+
+
 def main(fast: bool = False) -> List[str]:
     recs = load_records()
     lines = [] if recs else ["roofline_table,0,no_dryrun_records_yet"]
@@ -73,6 +112,7 @@ def main(fast: bool = False) -> List[str]:
             f"bound={r['bottleneck']};mfu_bound={r['mfu_bound']:.3f};"
             f"fits={((r.get('memory_per_device') or {}).get('fits_16GiB'))}")
     lines.extend(kernel_rows())
+    lines.extend(paged_attention_rows())
     return lines
 
 

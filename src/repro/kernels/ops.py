@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import compress as _compress
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rg_lru as _lru
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import wavg as _wavg
@@ -38,6 +39,19 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         logit_softcap=logit_softcap, block_q=block_q, block_k=block_k,
         interpret=not _on_tpu())
     return out.transpose(0, 2, 1, 3)
+
+
+def paged_decode_attention(q: jax.Array, pk: jax.Array, pv: jax.Array,
+                           ppos: jax.Array, table: jax.Array,
+                           pos: jax.Array, *, scale: Optional[float] = None,
+                           logit_softcap: Optional[float] = None
+                           ) -> jax.Array:
+    """One-token paged attention straight off the (NB, bs, Hkv, hd) pool:
+    q (B,Hq,hd), table (B,nb), pos (B,) -> (B,Hq,hd).  No gathered
+    logical view is ever materialized (see kernels/paged_attention.py)."""
+    return _pa.paged_decode_attention(
+        q, pk, pv, ppos, table, pos, scale=scale,
+        logit_softcap=logit_softcap, interpret=not _on_tpu())
 
 
 def ssd_scan(x, dt, a, b_, c_, *, chunk: int = 128, block_h: int = 8):

@@ -37,6 +37,46 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       ).astype(q.dtype)
 
 
+def paged_decode_attention(q: jax.Array, pk: jax.Array, pv: jax.Array,
+                           ppos: jax.Array, table: jax.Array,
+                           pos: jax.Array, *,
+                           scale: Optional[float] = None,
+                           logit_softcap: Optional[float] = None
+                           ) -> jax.Array:
+    """One-token attention against a paged KV pool, via the full gather.
+
+    q: (B, Hq, hd); pk/pv: (NB, bs, Hkv, hd); ppos: (NB, bs);
+    table: (B, nb); pos: (B,) -> (B, Hq, hd).
+
+    Materializes the logical ``(B, nb*bs, ...)`` views — exactly what the
+    Pallas kernel avoids — then runs the masked softmax.  A row with no
+    valid entries returns 0 (matching the kernel's zeroed-probability
+    semantics rather than a uniform average over garbage).  The oracle
+    attends the *whole* table; the kernel skips blocks past ``pos[b]``,
+    so they agree whenever those blocks hold no valid entries — the
+    invariant the engine maintains (admission wipes, rollback re-wipes).
+    """
+    b, hq, hd = q.shape
+    _, bs, hkv, _ = pk.shape
+    nb = table.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kc = pk[table].reshape(b, nb * bs, hkv, hd).astype(jnp.float32)
+    vc = pv[table].reshape(b, nb * bs, hkv, hd).astype(jnp.float32)
+    pc = ppos[table].reshape(b, nb * bs)
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kc) * scale
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    valid = (pc >= 0) & (pc <= pos[:, None])          # (B, nb*bs)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m), 0.0)
+    l = jnp.maximum(p.sum(axis=-1), 1e-30)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vc) / l[..., None]
+    return out.reshape(b, hq, hd).astype(q.dtype)
+
+
 def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b_: jax.Array,
              c_: jax.Array) -> jax.Array:
     """Sequential (step-by-step) SSD reference.  Shapes as kernels/ssd_scan."""

@@ -73,6 +73,10 @@ def main() -> None:
                     help="paged KV block size in tokens (0 = contiguous)")
     ap.add_argument("--pool-blocks", type=int, default=0,
                     help="paged KV pool size (0 = full residency)")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="paged decode via the Pallas block-table "
+                         "attention kernel instead of the gather "
+                         "(needs --block-size; interpret mode on CPU)")
     ap.add_argument("--speculate", action="store_true",
                     help="self-drafting speculative decode (greedy only)")
     ap.add_argument("--draft-k", type=int, default=4)
@@ -85,6 +89,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.cuts and args.mode != "split":
         ap.error("--cuts only takes effect with --mode split")
+    if args.paged_kernel and not args.block_size:
+        ap.error("--paged-kernel needs a paged cache (--block-size)")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -95,7 +101,8 @@ def main() -> None:
     if args.mode == "split":
         cuts = (tuple(int(c) for c in args.cuts.split(","))
                 if args.cuts else WSSLConfig().resolve_cuts(cfg))
-    engine = DecodeEngine(cfg, impl=args.impl, cuts=cuts)
+    engine = DecodeEngine(cfg, impl=args.impl, cuts=cuts,
+                          paged_kernel=args.paged_kernel)
 
     if args.requests > 0:
         sc = get_scenario(args.scenario)

@@ -537,7 +537,8 @@ def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 def paged_decode_attention(cfg: ModelConfig, p: Params, x: jax.Array,
                            cache: Params, pos: jax.Array,
-                           table: jax.Array) -> Tuple[jax.Array, Params]:
+                           table: jax.Array, *,
+                           kernel: bool = False) -> Tuple[jax.Array, Params]:
     """One-token attention against a paged (pooled) global KV cache.
 
     ``table`` is ``(B, nb)`` int32 mapping each row's logical blocks to pool
@@ -546,6 +547,14 @@ def paged_decode_attention(cfg: ModelConfig, p: Params, x: jax.Array,
     ``(B, nb * block_size)`` view is value-identical to the contiguous
     ``(B, max_len)`` cache for live rows — the masked softmax that follows
     is the same XLA computation and the result is bit-for-bit equal.
+
+    ``kernel=True`` replaces the gather with the Pallas block-table kernel
+    (kernels/paged_attention.py): attention runs directly against the
+    ``(NB, bs, H, hd)`` pool with the table as a scalar-prefetch operand,
+    skipping blocks past ``pos[b]``, and no ``(B, nb*bs, ...)`` logical
+    view is ever materialized.  Same tokens, online-softmax fp band (see
+    docs/serving.md); the gather path below stays as the documented
+    fallback and the parity reference.
 
     Paged layers are always effectively global (``window is None``): local
     ring layers already bound their cache at ``window`` entries and gain
@@ -577,6 +586,14 @@ def paged_decode_attention(cfg: ModelConfig, p: Params, x: jax.Array,
         "pv": cache["pv"].at[phys, off].set(v[:, 0]),
         "ppos": cache["ppos"].at[phys, off].set(pos_b),
     }
+    if kernel:
+        from repro.kernels import ops
+        out = ops.paged_decode_attention(
+            q[:, 0], cache["pk"], cache["pv"], cache["ppos"], table, pos_b,
+            scale=_scale(cfg), logit_softcap=cfg.attn_logit_softcap)
+        y = jnp.einsum("bshe,hed->bsd", out[:, None].astype(dtype),
+                       p["wo"].astype(dtype))
+        return y, cache
     # gather the logical view: table rows are in logical order, so entry
     # (b, l) of the view is absolute position l — same layout as contiguous
     kc = cache["pk"][table].reshape(b, nb * bs, cfg.num_kv_heads, cfg.head_dim)

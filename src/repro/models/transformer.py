@@ -720,12 +720,14 @@ def cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
 def _decode_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
                   cache: Params, pos: jax.Array,
                   decode_window_override: Optional[int],
-                  table: Optional[jax.Array] = None) -> Tuple[jax.Array, Params]:
+                  table: Optional[jax.Array] = None,
+                  paged_kernel: bool = False) -> Tuple[jax.Array, Params]:
     h = apply_norm(cfg, p["norm1"], x)
     if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
         if "pk" in cache:
             mixed, cache = attn.paged_decode_attention(cfg, p["mixer"], h,
-                                                       cache, pos, table)
+                                                       cache, pos, table,
+                                                       kernel=paged_kernel)
         else:
             window = spec.window
             if spec.mixer == ATTN_GLOBAL and decode_window_override:
@@ -750,12 +752,15 @@ def _decode_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
 def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
                 cache: Params, pos: jax.Array, *,
                 decode_window_override: Optional[int] = None,
-                table: Optional[jax.Array] = None
+                table: Optional[jax.Array] = None,
+                paged_kernel: bool = False
                 ) -> Tuple[jax.Array, Params]:
     """One decode step.  tokens: (B, 1) -> (logits (B,1,V), new cache).
 
     ``table`` is the ``(B, nb)`` block table for paged caches (see
-    :func:`init_cache`); contiguous caches ignore it."""
+    :func:`init_cache`); contiguous caches ignore it.  ``paged_kernel``
+    routes paged layers through the Pallas block-table attention kernel
+    instead of the gather path (see attention.paged_decode_attention)."""
     x = _embed(cfg, params, tokens, None)
     period_specs, n_full, _ = _superblock_layout(cfg)
 
@@ -764,7 +769,8 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
         new_c = []
         for j, spec in enumerate(period_specs):
             x, cj = _decode_layer(cfg, spec, bp[j], x, bc[j], pos,
-                                  decode_window_override, table)
+                                  decode_window_override, table,
+                                  paged_kernel)
             new_c.append(cj)
         return x, new_c
 
@@ -779,7 +785,7 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
     for i, lp in enumerate(params["rem"]):
         spec = all_specs[n_full * len(period_specs) + i]
         x, c = _decode_layer(cfg, spec, lp, x, cache["rem"][i], pos,
-                             decode_window_override, table)
+                             decode_window_override, table, paged_kernel)
         new_rem.append(c)
 
     x = apply_norm(cfg, params["final_norm"], x)
@@ -831,7 +837,8 @@ def stage_decode_step(stage_params: Params, cfg: ModelConfig, x: jax.Array,
                       cache: Params, pos: jax.Array, stage_index: int,
                       num_stages: int, *,
                       decode_window_override: Optional[int] = None,
-                      table: Optional[jax.Array] = None
+                      table: Optional[jax.Array] = None,
+                      paged_kernel: bool = False
                       ) -> Tuple[jax.Array, Params]:
     """One decode step through a single pipeline stage.
 
@@ -851,7 +858,8 @@ def stage_decode_step(stage_params: Params, cfg: ModelConfig, x: jax.Array,
         new_c = []
         for j, spec in enumerate(period_specs):
             x, cj = _decode_layer(cfg, spec, bp[j], x, bc[j], pos,
-                                  decode_window_override, table)
+                                  decode_window_override, table,
+                                  paged_kernel)
             new_c.append(cj)
         return x, new_c
 
@@ -870,7 +878,7 @@ def stage_decode_step(stage_params: Params, cfg: ModelConfig, x: jax.Array,
         for i, lp in enumerate(rem):
             spec = all_specs[n_rem_start + i]
             x, c = _decode_layer(cfg, spec, lp, x, cache["rem"][i], pos,
-                                 decode_window_override, table)
+                                 decode_window_override, table, paged_kernel)
             new_rem.append(c)
         new_cache["rem"] = new_rem
         x = apply_norm(cfg, stage_params["final_norm"], x)
@@ -882,7 +890,8 @@ def split_decode_step(stages: Sequence[Params], cfg: ModelConfig,
                       tokens: jax.Array, cache_stages: Sequence[Params],
                       pos: jax.Array, *,
                       decode_window_override: Optional[int] = None,
-                      table: Optional[jax.Array] = None
+                      table: Optional[jax.Array] = None,
+                      paged_kernel: bool = False
                       ) -> Tuple[jax.Array, List[Params]]:
     """One decode step through the full client→edge→server pipeline:
     :func:`decode_step` with the params *and* cache partitioned at the WSSL
@@ -892,7 +901,7 @@ def split_decode_step(stages: Sequence[Params], cfg: ModelConfig,
     for i, (sp, sc) in enumerate(zip(stages, cache_stages)):
         x, nc = stage_decode_step(sp, cfg, x, sc, pos, i, len(stages),
                                   decode_window_override=decode_window_override,
-                                  table=table)
+                                  table=table, paged_kernel=paged_kernel)
         new_caches.append(nc)
     return x, new_caches
 

@@ -159,3 +159,42 @@ def summarize_memory(mem_analysis) -> Optional[Dict[str, float]]:
         out["peak_estimate_bytes"] = live
         out["fits_16GiB"] = bool(live < HBM_PER_CHIP)
     return out
+
+
+def num_paged_layers(model_cfg) -> int:
+    """Attention layers whose KV pages in a paged decode cache: the
+    effectively-global ones (``window is None``).  Local ring layers keep
+    their bounded contiguous cache (transformer._layer_cache_init)."""
+    return sum(1 for s in model_cfg.layer_specs()
+               if s.mixer in ("global", "local") and s.window is None)
+
+
+def paged_attention_bytes(model_cfg, *, block_size: int, num_blocks: int,
+                          live_entries: float, batch: int = 1,
+                          kv_itemsize: int = 4) -> Dict[str, float]:
+    """Per-decode-token HBM traffic of the two paged-attention paths.
+
+    One logical KV entry costs ``2·Hkv·hd·itemsize`` (K + V) plus 4 bytes
+    of ``ppos``.  The gather path materializes the ``(B, nb·bs, ...)``
+    logical views every step — the pool is read, the views are written,
+    and the masked softmax reads them back: 3 passes over ``nb·bs``
+    entries per row regardless of occupancy.  The Pallas kernel streams
+    each *live* block of the pool exactly once and writes nothing but the
+    ``(B, Hq, hd)`` output: one pass over ``live_entries`` per row
+    (``live_entries`` may be fractional — a trajectory average).
+
+    ``view_bytes`` is the wire-accounting cross-check: the exact size of
+    the materialized gathered views (one pass), measurable from the real
+    arrays the gather path builds — serve_bench asserts the analytic and
+    measured values agree to 1e-4.
+    """
+    entry = 2 * model_cfg.num_kv_heads * model_cfg.head_dim * kv_itemsize + 4
+    layers = num_paged_layers(model_cfg)
+    view = batch * layers * num_blocks * block_size * entry
+    return {
+        "entry_bytes": entry,
+        "paged_layers": layers,
+        "view_bytes": float(view),
+        "gather_bytes": float(3 * view),
+        "kernel_bytes": float(batch * layers * live_entries * entry),
+    }

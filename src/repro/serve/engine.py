@@ -35,6 +35,7 @@ Three shape families of executables exist:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -55,7 +56,11 @@ class BatchState:
     In paged mode (``block_size > 0``) the global-attention KV lives in a
     shared block pool and ``table`` maps each slot's logical blocks to pool
     blocks.  The table is host-side numpy — the scheduler rewrites rows at
-    admission/release and the engine ships it to the device per call."""
+    admission/release, which must go through (or be followed by)
+    :meth:`mark_table_dirty`; the engine reads :meth:`device_table`, which
+    re-uploads host→device only when a row actually changed and otherwise
+    reuses the cached device copy across chunks (``table_uploads`` counts
+    the uploads — pinned by a regression test)."""
 
     cache: Params
     tok: jax.Array      # (B, 1) int32 — last token per slot
@@ -63,6 +68,23 @@ class BatchState:
     max_len: int
     table: Optional[np.ndarray] = None   # (B, nb) int32 block table
     block_size: int = 0
+    table_uploads: int = 0               # host→device table transfers
+    _table_dev: Optional[jax.Array] = dataclasses.field(
+        default=None, repr=False)
+    _table_dirty: bool = True
+
+    def mark_table_dirty(self) -> None:
+        """Host-side ``table`` rows changed; next chunk re-uploads."""
+        self._table_dirty = True
+
+    def device_table(self) -> Optional[jax.Array]:
+        if self.table is None:
+            return None
+        if self._table_dev is None or self._table_dirty:
+            self._table_dev = jnp.asarray(self.table, jnp.int32)
+            self._table_dirty = False
+            self.table_uploads += 1
+        return self._table_dev
 
 
 def _scatter_slot(dst: Params, src: Params, slot: int) -> Params:
@@ -102,42 +124,61 @@ def _is_recurrent(d) -> bool:
     return isinstance(d, dict) and ("state" in d or "h" in d)
 
 
-def _scatter_slot_paged(dst: Params, src: Params, slot: int,
-                        row: np.ndarray, block_size: int) -> Params:
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnums=(4,))
+def _scatter_slot_paged_jit(dst: Params, src: Params, slot: jax.Array,
+                            blocks: jax.Array, block_size: int) -> Params:
     """Paged-mode admission: write a batch-1 *contiguous* prefill cache
-    into a pooled batched cache.
+    into a pooled batched cache — touching O(reserved blocks), not O(pool).
 
     Non-paged layers (local rings, SSM/RG-LRU state) keep the contiguous
     per-row layout and get the usual whole-row replace.  Paged layers
-    reshape the contiguous ``(1, max_len, ...)`` region into ``nb`` blocks
-    and scatter them at the slot's table row.  Duplicate table entries (the
-    slot's scratch block, mapped by every unallocated logical block) all
-    receive *fresh* values — reservations cover the prompt, so every block
-    overlapping it is real — making the duplicate scatter order-invariant.
-    """
-    nb = row.shape[0]
-    row = jnp.asarray(row, jnp.int32)
+    reshape the contiguous ``(1, max_len, ...)`` region into blocks and
+    scatter ONLY the ``len(blocks)`` reserved pool rows (reservations
+    cover the prompt; tail blocks within the reservation carry fresh -1
+    entries, wiping whatever their previous owner left).  The slot's
+    scratch block — mapped by every logical block past the reservation —
+    gets its ``ppos`` row wiped to -1 instead of a full K/V rewrite: stale
+    K/V under an invalid position is never read, but a stale *position*
+    from the slot's empty-phase garbage decode would pass the validity
+    mask.  The donated ``dst`` makes the whole scatter an in-place pool
+    update (regression-tested via the executable's cost analysis)."""
+    nr = blocks.shape[0]
 
     def write(d, stacked, s):
         if "pk" in d:
             if stacked:
-                def resh(a):  # (n_full, 1, max_len, ...) -> (n_full, nb, bs, ...)
-                    return a.reshape((a.shape[0], nb, block_size) + a.shape[3:])
-                return {"pk": d["pk"].at[:, row].set(resh(s["k"])),
-                        "pv": d["pv"].at[:, row].set(resh(s["v"])),
-                        "ppos": d["ppos"].at[:, row].set(resh(s["pos"]))}
+                def resh(a):  # (n_full, 1, max_len, ...) -> (n_full, nr, bs, ...)
+                    nb = a.shape[2] // block_size
+                    a = a.reshape((a.shape[0], nb, block_size) + a.shape[3:])
+                    return a[:, :nr]
+                return {"pk": d["pk"].at[:, blocks].set(resh(s["k"])),
+                        "pv": d["pv"].at[:, blocks].set(resh(s["v"])),
+                        "ppos": d["ppos"].at[:, blocks].set(resh(s["pos"]))
+                                         .at[:, slot].set(-1)}
 
-            def resh(a):      # (1, max_len, ...) -> (nb, bs, ...)
-                return a.reshape((nb, block_size) + a.shape[2:])
-            return {"pk": d["pk"].at[row].set(resh(s["k"])),
-                    "pv": d["pv"].at[row].set(resh(s["v"])),
-                    "ppos": d["ppos"].at[row].set(resh(s["pos"]))}
+            def resh(a):      # (1, max_len, ...) -> (nr, bs, ...)
+                nb = a.shape[1] // block_size
+                return a.reshape((nb, block_size) + a.shape[2:])[:nr]
+            return {"pk": d["pk"].at[blocks].set(resh(s["k"])),
+                    "pv": d["pv"].at[blocks].set(resh(s["v"])),
+                    "ppos": d["ppos"].at[blocks].set(resh(s["pos"]))
+                                     .at[slot].set(-1)}
         if stacked:
             return jax.tree.map(lambda dd, ss: dd.at[:, slot].set(ss[:, 0]),
                                 d, s)
         return jax.tree.map(lambda dd, ss: dd.at[slot].set(ss[0]), d, s)
 
     return _walk_cache(write, dst, src)
+
+
+def _scatter_slot_paged(dst: Params, src: Params, slot: int,
+                        blocks: np.ndarray, block_size: int) -> Params:
+    """See :func:`_scatter_slot_paged_jit` — this wrapper normalizes the
+    host-side ``slot``/``blocks`` so jit retraces only per distinct
+    (cache shapes, reserved-count) pair, never per slot id."""
+    return _scatter_slot_paged_jit(
+        dst, src, jnp.asarray(slot, jnp.int32),
+        jnp.asarray(np.asarray(blocks), jnp.int32), block_size)
 
 
 class DecodeEngine:
@@ -151,11 +192,16 @@ class DecodeEngine:
     def __init__(self, cfg: ModelConfig, *, impl: str = "dense",
                  cuts: Optional[Sequence[int]] = None,
                  decode_window_override: Optional[int] = None,
-                 spec_cut: Optional[int] = None):
+                 spec_cut: Optional[int] = None,
+                 paged_kernel: bool = False):
         self.cfg = cfg
         self.impl = impl
         self.cuts = tuple(int(c) for c in cuts) if cuts else None
         self.decode_window_override = decode_window_override
+        # paged decode attention via the Pallas block-table kernel instead
+        # of the gather path (kernels/paged_attention.py); contiguous
+        # caches are unaffected
+        self.paged_kernel = bool(paged_kernel)
         if spec_cut is None:
             # the draft model is the client stage: in split mode that stage
             # already exists at cuts[0]; merged mode drafts at the WSSL
@@ -200,8 +246,11 @@ class DecodeEngine:
                 tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
                 return tok.astype(jnp.int32), cache
 
+            # the fresh cache is consumed — donate it so XLA fills the
+            # buffer in place instead of allocating a second copy
             self._executables[key] = (
-                jax.jit(run).lower(params, prompts, cache).compile())
+                jax.jit(run, donate_argnums=(2,))
+                .lower(params, prompts, cache).compile())
             self.prefill_compiles += 1
         return self._executables[key]
 
@@ -230,12 +279,12 @@ class DecodeEngine:
                         logits, cache = tf.decode_step(
                             params, self.cfg, tok, cache, pos,
                             decode_window_override=self.decode_window_override,
-                            table=table)
+                            table=table, paged_kernel=self.paged_kernel)
                     else:
                         logits, cache = tf.split_decode_step(
                             stages, self.cfg, tok, cache, pos,
                             decode_window_override=self.decode_window_override,
-                            table=table)
+                            table=table, paged_kernel=self.paged_kernel)
                     lg = logits[:, 0]
                     greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
                     rng, sub = jax.random.split(rng)
@@ -256,7 +305,12 @@ class DecodeEngine:
 
             args = (params, tok, cache, pos, forced, force_len, rng,
                     temperature) + (() if table is None else (table,))
-            self._executables[key] = jax.jit(run).lower(*args).compile()
+            # donate the cache: the caller always replaces state.cache with
+            # the chunk's output, so the (multi-GB, in paged mode pooled)
+            # input buffer is dead on entry — donation updates it in place
+            # and peak live memory holds ONE pool copy, not two
+            self._executables[key] = (
+                jax.jit(run, donate_argnums=(2,)).lower(*args).compile())
             self.decode_compiles += 1
         return self._executables[key]
 
@@ -284,7 +338,7 @@ class DecodeEngine:
                     x, ccache = tf.stage_decode_step(
                         client, self.cfg, tok, ccache, pos, 0, 2,
                         decode_window_override=self.decode_window_override,
-                        table=table)
+                        table=table, paged_kernel=self.paged_kernel)
                     logits = tf.early_exit_logits(params, self.cfg, x)
                     nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
                     return (nxt[:, None], ccache, pos + 1), nxt
@@ -293,6 +347,9 @@ class DecodeEngine:
                                          length=k)
                 return jnp.swapaxes(drafts, 0, 1)    # (B, K)
 
+            # NO cache donation here: the draft discards its mutated client
+            # cache and the caller passes the SAME cache straight into the
+            # verify executable — donating would invalidate it
             args = (params, tok, cache, pos) + (
                 () if table is None else (table,))
             self._executables[key] = jax.jit(run).lower(*args).compile()
@@ -342,12 +399,12 @@ class DecodeEngine:
                         logits, cache = tf.decode_step(
                             params, self.cfg, tok, cache, pos,
                             decode_window_override=self.decode_window_override,
-                            table=table)
+                            table=table, paged_kernel=self.paged_kernel)
                     else:
                         logits, cache = tf.split_decode_step(
                             stages, self.cfg, tok, cache, pos,
                             decode_window_override=self.decode_window_override,
-                            table=table)
+                            table=table, paged_kernel=self.paged_kernel)
                     greedy = jnp.argmax(logits[:, 0], axis=-1
                                         ).astype(jnp.int32)
                     recs = _walk_cache(
@@ -419,9 +476,12 @@ class DecodeEngine:
                                               axis=1)
                 return greedy, acc, n, new_tok, cache, pos0 + n
 
+            # the verify pass is the cache's last reader in a speculative
+            # round (the draft ran first) — donate it like the chunk exec
             args = (params, tok, cache, pos, draft) + (
                 () if table is None else (table,))
-            self._executables[key] = jax.jit(run).lower(*args).compile()
+            self._executables[key] = (
+                jax.jit(run, donate_argnums=(2,)).lower(*args).compile())
             self.verify_compiles += 1
         return self._executables[key]
 
@@ -510,8 +570,10 @@ class DecodeEngine:
             row = np.full((nb,), slot, np.int32)
             row[:len(blocks)] = np.asarray(blocks, np.int32)
             state.table[slot] = row
+            state.mark_table_dirty()
             state.cache = _scatter_slot_paged(state.cache, cache1, slot,
-                                              row, state.block_size)
+                                              np.asarray(blocks, np.int32),
+                                              state.block_size)
         else:
             state.cache = _scatter_slot(state.cache, cache1, slot)
         state.tok = state.tok.at[slot].set(tok[0])
@@ -526,7 +588,7 @@ class DecodeEngine:
         forced = jnp.asarray(np.asarray(forced), jnp.int32)
         force_len = jnp.asarray(np.asarray(force_len), jnp.int32)
         temp = jnp.asarray(temperature, jnp.float32)
-        table = None if state.table is None else jnp.asarray(state.table)
+        table = state.device_table()
         exe = self._chunk_exec(params, state.tok, state.cache, state.pos,
                                forced, force_len, rng, temp, table)
         args = (params, state.tok, state.cache, state.pos, forced,
@@ -545,7 +607,7 @@ class DecodeEngine:
         ``(tokens (B, K), accepted_drafts (B,), emitted (B,))`` — the first
         ``emitted[b]`` entries of row ``b`` are exactly the tokens greedy
         decoding would produce (verified, bit-for-bit)."""
-        table = None if state.table is None else jnp.asarray(state.table)
+        table = state.device_table()
         t_args = () if table is None else (table,)
         dexe = self._draft_exec(params, state.tok, state.cache, state.pos,
                                 draft_k, table)
@@ -593,14 +655,15 @@ _ENGINES: Dict[Tuple, DecodeEngine] = {}
 def get_engine(cfg: ModelConfig, *, impl: str = "dense",
                cuts: Optional[Sequence[int]] = None,
                decode_window_override: Optional[int] = None,
-               spec_cut: Optional[int] = None) -> DecodeEngine:
+               spec_cut: Optional[int] = None,
+               paged_kernel: bool = False) -> DecodeEngine:
     """Process-wide engine cache: repeated ``generate()`` calls (and all
     replicas of a served model) reuse one engine and its executables."""
     key = (cfg, impl, tuple(cuts) if cuts else None, decode_window_override,
-           spec_cut)
+           spec_cut, paged_kernel)
     if key not in _ENGINES:
         _ENGINES[key] = DecodeEngine(
             cfg, impl=impl, cuts=cuts,
             decode_window_override=decode_window_override,
-            spec_cut=spec_cut)
+            spec_cut=spec_cut, paged_kernel=paged_kernel)
     return _ENGINES[key]

@@ -371,6 +371,7 @@ class FaultRoutedServer:
                             # point the released row back at its scratch
                             # block before the allocator reuses the blocks
                             states[r].table[slot, :] = slot
+                            states[r].mark_table_dirty()
                         sched.release(slot)
                     busy_until[r] = end
                 # every decode step ships the whole batch across each hop

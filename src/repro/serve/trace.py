@@ -108,6 +108,7 @@ class SimEngine:
             row = np.full((nb,), slot, np.int32)
             row[:len(blocks)] = np.asarray(blocks, np.int32)
             state.table[slot] = row
+            state.mark_table_dirty()
         self._count("prefill_compiles", ("prefill", 1, length))
         tok0 = int(self._step(np.asarray(prompt[-1]),
                               np.asarray(length - 1)))
