@@ -18,7 +18,7 @@ from repro.data.synthetic import make_image_like
 
 
 def run(clients=(2, 6, 10), rounds=12, local_steps=6, n=6000, seed=0,
-        lr=2e-3) -> Dict:
+        lr=2e-3, fused_adam=False) -> Dict:
     data = make_image_like(n=n, seed=seed)
     n_tr = int(n * 0.7)
     n_val = int(n * 0.1)
@@ -38,7 +38,7 @@ def run(clients=(2, 6, 10), rounds=12, local_steps=6, n=6000, seed=0,
         h = train_wssl(ad, loaders, val, test,
                        WSSLConfig(num_clients=nc, participation_fraction=0.5),
                        rounds=rounds, local_steps=local_steps, lr=lr,
-                       seed=seed)
+                       seed=seed, fused_adam=fused_adam)
         out["clients"][nc] = {"acc_per_round": h["test_acc"],
                               "best": h["best_acc"]}
     cl = ClientLoader({"x": tr["x"], "y": tr["y"]}, np.arange(n_tr),
@@ -50,9 +50,10 @@ def run(clients=(2, 6, 10), rounds=12, local_steps=6, n=6000, seed=0,
     return out
 
 
-def main(fast: bool = False) -> List[str]:
+def main(fast: bool = False, fused_adam: bool = False) -> List[str]:
     res = run(clients=(2, 4) if fast else (2, 6, 10),
-              rounds=6 if fast else 12, n=3000 if fast else 6000)
+              rounds=6 if fast else 12, n=3000 if fast else 6000,
+              fused_adam=fused_adam)
     lines = []
     per_call = res["wall_s"] * 1e6 / (len(res["clients"]) * res["rounds"])
     for nc, r in res["clients"].items():
@@ -62,5 +63,12 @@ def main(fast: bool = False) -> List[str]:
 
 
 if __name__ == "__main__":
-    for l in main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--fused-adam", action="store_true",
+                    help="fused masked-AdamW Pallas kernel in the split "
+                         "step (bit-identical fp32 results; perf knob)")
+    a = ap.parse_args()
+    for l in main(fast=a.fast, fused_adam=a.fused_adam):
         print(l)

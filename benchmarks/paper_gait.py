@@ -18,7 +18,7 @@ from repro.data.synthetic import make_gait_like
 
 
 def run(clients=(2, 4, 6, 8, 10), rounds=20, local_steps=10, n=20_000,
-        seed=0, lr=1e-3) -> Dict:
+        seed=0, lr=1e-3, fused_adam=False) -> Dict:
     data = make_gait_like(n=n, seed=seed)
     n_tr = int(n * 0.7)
     n_val = int(n * 0.1)
@@ -38,7 +38,7 @@ def run(clients=(2, 4, 6, 8, 10), rounds=20, local_steps=10, n=20_000,
         h = train_wssl(ad, loaders, val, test,
                        WSSLConfig(num_clients=nc, participation_fraction=0.5),
                        rounds=rounds, local_steps=local_steps, lr=lr,
-                       seed=seed)
+                       seed=seed, fused_adam=fused_adam)
         out["clients"][nc] = {"acc_per_round": h["test_acc"],
                               "best": h["best_acc"],
                               "participation": h["participation"],
@@ -52,9 +52,10 @@ def run(clients=(2, 4, 6, 8, 10), rounds=20, local_steps=10, n=20_000,
     return out
 
 
-def main(fast: bool = False) -> List[str]:
+def main(fast: bool = False, fused_adam: bool = False) -> List[str]:
     res = run(clients=(2, 4) if fast else (2, 4, 6, 8, 10),
-              rounds=8 if fast else 20, n=8000 if fast else 20_000)
+              rounds=8 if fast else 20, n=8000 if fast else 20_000,
+              fused_adam=fused_adam)
     lines = []
     per_call = res["wall_s"] * 1e6 / (len(res["clients"]) * res["rounds"])
     for nc, r in res["clients"].items():
@@ -68,5 +69,12 @@ def main(fast: bool = False) -> List[str]:
 
 
 if __name__ == "__main__":
-    for l in main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--fused-adam", action="store_true",
+                    help="fused masked-AdamW Pallas kernel in the split "
+                         "step (bit-identical fp32 results; perf knob)")
+    a = ap.parse_args()
+    for l in main(fast=a.fast, fused_adam=a.fused_adam):
         print(l)

@@ -63,6 +63,37 @@ def kernel_rows(n: int = 16, m: int = 50_000_000) -> List[str]:
     return rows
 
 
+def fused_adam_rows(n: int = 16, m: int = 50_000_000) -> List[str]:
+    """Analytic roofline rows for the fused masked-AdamW kernel
+    (kernels/fused_adam.py) vs the unfused tree.map optimizer chain, on
+    the same (N clients × M params) stacked client stage as
+    :func:`kernel_rows`.  Both are O(1)-flop-per-element streaming
+    passes, so the story is HBM round-trips: the unfused chain executed
+    op-by-op re-reads and re-writes the operand set ~8 times (moment
+    update, bias-corrected step, masked blend), while the fused kernel
+    makes exactly one pass — read (p, g, m, v) tiles, write
+    (p', m', v') — see roofline/analysis.fused_adam_bytes."""
+    from repro.roofline.analysis import HBM_BW, fused_adam_bytes
+    model = fused_adam_bytes(n * m)
+    rows = []
+    # ~14 flops per element (two EMAs, two bias corrections, rsqrt step,
+    # weight decay, three mask blends)
+    for name, bytes_total in (("adamw_unfused", model["bytes_unfused"]),
+                              ("adamw_fused", model["bytes_fused"])):
+        t_mem = bytes_total / HBM_BW
+        flops = 14.0 * n * m
+        rows.append(
+            f"roofline_kernel_{name},0,"
+            f"bytes_GB={bytes_total / 1e9:.2f};"
+            f"ai_flops_per_byte={flops / bytes_total:.3f};"
+            f"t_mem_ms={t_mem * 1e3:.2f};bound=memory")
+    rows.append(
+        f"roofline_kernel_adamw_fused_speedup,0,"
+        f"analytic={model['speedup']:.2f}x;"
+        f"passes_unfused=8;passes_fused=1")
+    return rows
+
+
 def paged_attention_rows(arch: str = "gemma3-12b", *, batch: int = 8,
                          max_len: int = 8192, block_size: int = 16,
                          occupancy: float = 0.5) -> List[str]:
@@ -112,6 +143,7 @@ def main(fast: bool = False) -> List[str]:
             f"bound={r['bottleneck']};mfu_bound={r['mfu_bound']:.3f};"
             f"fits={((r.get('memory_per_device') or {}).get('fits_16GiB'))}")
     lines.extend(kernel_rows())
+    lines.extend(fused_adam_rows())
     lines.extend(paged_attention_rows())
     return lines
 

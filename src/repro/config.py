@@ -658,7 +658,28 @@ class TrainConfig:
     # saved-activation stack shrinks by the span at the cost of one extra
     # in-span recompute during backward.
     remat_span: int = 4
+    # run the per-client split fwd/bwd as a lax.scan over chunks of this
+    # many clients instead of one flat vmap, capping activation memory at
+    # O(client_chunk) per shard.  None keeps the flat trace bit-for-bit
+    # (the golden rounds); a set value must divide the per-shard client
+    # count (checked at trace time in core/round.py).
+    client_chunk: Optional[int] = None
+    # dispatch adamw_update through the fused masked-AdamW Pallas kernel
+    # (kernels/fused_adam.py): one streaming pass instead of ~8 HBM
+    # round-trips per leaf.  adamw-only; fp32 results are bit-identical
+    # to the unfused path under jit.
+    fused_adam: bool = False
     seed: int = 0
+
+    def __post_init__(self):
+        if self.client_chunk is not None and self.client_chunk < 1:
+            raise ValueError(
+                f"client_chunk must be a positive client count or None, "
+                f"got {self.client_chunk}")
+        if self.fused_adam and self.optimizer != "adamw":
+            raise ValueError(
+                f"fused_adam requires optimizer='adamw' (the kernel fuses "
+                f"the Adam moment update), got optimizer={self.optimizer!r}")
 
 
 @dataclass(frozen=True)

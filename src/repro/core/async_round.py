@@ -52,8 +52,10 @@ from repro import compress as compress_mod
 from repro.core import aggregation, wssl
 from repro.core.protocol import hierarchical_sync_bytes, sync_round_bytes
 from repro.core.round import (RoundMetrics, ShardCtx, WSSLState,
+                              _chunked_client_map, _client_grads_chunked,
                               _client_stage_bytes, _client_vmap, _gather,
-                              _loc, _local_plan, _per_client_losses, _psum)
+                              _loc, _local_plan, _opt_kwargs,
+                              _per_client_losses, _psum)
 from repro.models import transformer as tf
 from repro.optim import clip_by_global_norm, make_optimizer
 from repro.sim import faults as sim_faults
@@ -239,82 +241,98 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
 
     # ---- split fwd / chained N-phase backward (as in wssl_round) --------
     span = train_cfg.remat_span
+    chunk = train_cfg.client_chunk
+    if chunk is not None:
+        # client-chunked scan (shared with the sync round): the async
+        # round's CE weight is agg_w·part instead of agg_w·mask
+        (loss, pcl, g_client, g_server, g_edges, hop_bytes,
+         act_wire_bytes) = _client_grads_chunked(
+            state.client_stack, state.edge_stages, state.server_params,
+            tokens, labels, embeds, agg_w_loc * part_loc,
+            model_cfg=model_cfg, train_cfg=train_cfg, impl=impl,
+            chunk=chunk, n=n, n_loc=n_loc, ctx=ctx, comp_cfg=comp_cfg,
+            comp_p=comp_p, compress_acts=compress_acts, rng_sel=rng_sel)
+    else:
+        def client_fn(cstack):
+            def one(cp, toks, emb):
+                return tf.client_forward(cp, model_cfg, toks, embeds=emb,
+                                         impl=impl, remat=remat,
+                                         remat_span=span)
+            if embeds is not None:
+                return _client_vmap(one)(cstack, tokens, embeds)
+            return _client_vmap(lambda cp, t: one(cp, t, None))(cstack,
+                                                                tokens)
 
-    def client_fn(cstack):
-        def one(cp, toks, emb):
-            return tf.client_forward(cp, model_cfg, toks, embeds=emb,
-                                     impl=impl, remat=remat, remat_span=span)
-        if embeds is not None:
-            return _client_vmap(one)(cstack, tokens, embeds)
-        return _client_vmap(lambda cp, t: one(cp, t, None))(cstack, tokens)
-
-    acts, client_vjp = jax.vjp(client_fn, state.client_stack)
-    acts = shard_activation(acts, "client", None, None, None)
-    hop_bytes = [acts.size // acts.shape[0] * acts.dtype.itemsize]
-    act_wire_bytes = []
-    if compress_acts:
-        acts = compress_mod.compress_activations(
-            acts, jax.random.fold_in(rng_sel, 0xAC0), comp_cfg, comp_p)
-        act_wire_bytes.append(compress_mod.activation_wire_bytes(
-            acts.size // acts.shape[0] // acts.shape[-1], acts.shape[-1],
-            comp_cfg, comp_p))
-
-    x, edge_vjps = acts, []
-    edge_aux = jnp.zeros((), jnp.float32)
-    for j in range(num_edges):
-        def edge_fn(p, a, j=j):
-            return _client_vmap(
-                lambda pi, ai: tf.stage_forward(pi, model_cfg, ai, j + 1,
-                                                impl=impl, remat=remat,
-                                                remat_span=span,
-                                                with_aux=True),
-                in_axes=(None, 0))(p, a)
-        (x, aux_j), vjp = jax.vjp(edge_fn, state.edge_stages[j], x)
-        x = shard_activation(x, "client", None, None, None)
-        edge_aux = edge_aux + (
-            _psum(aux_j.mean(), ctx) / ctx.num_shards
-            if ctx is not None else aux_j.mean())
-        edge_vjps.append(vjp)
-        hop_bytes.append(x.size // x.shape[0] * x.dtype.itemsize)
+        acts, client_vjp = jax.vjp(client_fn, state.client_stack)
+        acts = shard_activation(acts, "client", None, None, None)
+        hop_bytes = [acts.size // acts.shape[0] * acts.dtype.itemsize]
+        act_wire_bytes = []
         if compress_acts:
-            x = compress_mod.compress_activations(
-                x, jax.random.fold_in(rng_sel, 0xAC1 + j), comp_cfg, comp_p)
+            acts = compress_mod.compress_activations(
+                acts, jax.random.fold_in(rng_sel, 0xAC0), comp_cfg, comp_p)
             act_wire_bytes.append(compress_mod.activation_wire_bytes(
-                x.size // x.shape[0] // x.shape[-1], x.shape[-1],
-                comp_cfg, comp_p))
+                acts.size // acts.shape[0] // acts.shape[-1],
+                acts.shape[-1], comp_cfg, comp_p))
 
-    def server_loss(sp, a):
-        losses, aux = _per_client_losses(model_cfg, sp, a, labels, impl,
-                                         remat, span)
-        local = jnp.sum(agg_w_loc * part_loc * losses)
-        if ctx is not None:
-            total = (jax.lax.psum(local, ctx.axis)
-                     + jax.lax.psum(aux, ctx.axis) / ctx.num_shards)
-        else:
-            total = local + aux
-        return total, losses
+        x, edge_vjps = acts, []
+        edge_aux = jnp.zeros((), jnp.float32)
+        for j in range(num_edges):
+            def edge_fn(p, a, j=j):
+                return _client_vmap(
+                    lambda pi, ai: tf.stage_forward(pi, model_cfg, ai,
+                                                    j + 1, impl=impl,
+                                                    remat=remat,
+                                                    remat_span=span,
+                                                    with_aux=True),
+                    in_axes=(None, 0))(p, a)
+            (x, aux_j), vjp = jax.vjp(edge_fn, state.edge_stages[j], x)
+            x = shard_activation(x, "client", None, None, None)
+            edge_aux = edge_aux + (
+                _psum(aux_j.mean(), ctx) / ctx.num_shards
+                if ctx is not None else aux_j.mean())
+            edge_vjps.append(vjp)
+            hop_bytes.append(x.size // x.shape[0] * x.dtype.itemsize)
+            if compress_acts:
+                x = compress_mod.compress_activations(
+                    x, jax.random.fold_in(rng_sel, 0xAC1 + j), comp_cfg,
+                    comp_p)
+                act_wire_bytes.append(compress_mod.activation_wire_bytes(
+                    x.size // x.shape[0] // x.shape[-1], x.shape[-1],
+                    comp_cfg, comp_p))
 
-    (loss, pcl), (g_server, g_x) = jax.value_and_grad(
-        server_loss, argnums=(0, 1), has_aux=True)(state.server_params, x)
-    loss = loss + edge_aux
-    g_server = _psum(g_server, ctx)
+        def server_loss(sp, a):
+            losses, aux = _per_client_losses(model_cfg, sp, a, labels,
+                                             impl, remat, span)
+            local = jnp.sum(agg_w_loc * part_loc * losses)
+            if ctx is not None:
+                total = (jax.lax.psum(local, ctx.axis)
+                         + jax.lax.psum(aux, ctx.axis) / ctx.num_shards)
+            else:
+                total = local + aux
+            return total, losses
 
-    if compress_acts:
-        g_x = compress_mod.compress_activations(
-            g_x, jax.random.fold_in(rng_sel, 0xDC0 + num_edges), comp_cfg,
-            comp_p)
-    aux_ct = jnp.full((n_loc,), 1.0 / n, jnp.float32)
-    g_edges = []
-    for back_j, vjp in enumerate(reversed(edge_vjps)):
-        g_e, g_x = vjp((g_x, aux_ct))
+        (loss, pcl), (g_server, g_x) = jax.value_and_grad(
+            server_loss, argnums=(0, 1), has_aux=True)(
+                state.server_params, x)
+        loss = loss + edge_aux
+        g_server = _psum(g_server, ctx)
+
         if compress_acts:
             g_x = compress_mod.compress_activations(
-                g_x, jax.random.fold_in(rng_sel,
-                                        0xDC0 + num_edges - 1 - back_j),
+                g_x, jax.random.fold_in(rng_sel, 0xDC0 + num_edges),
                 comp_cfg, comp_p)
-        g_edges.append(_psum(g_e, ctx))
-    g_edges.reverse()
-    (g_client,) = client_vjp(g_x)
+        aux_ct = jnp.full((n_loc,), 1.0 / n, jnp.float32)
+        g_edges = []
+        for back_j, vjp in enumerate(reversed(edge_vjps)):
+            g_e, g_x = vjp((g_x, aux_ct))
+            if compress_acts:
+                g_x = compress_mod.compress_activations(
+                    g_x, jax.random.fold_in(rng_sel,
+                                            0xDC0 + num_edges - 1 - back_j),
+                    comp_cfg, comp_p)
+            g_edges.append(_psum(g_e, ctx))
+        g_edges.reverse()
+        (g_client,) = client_vjp(g_x)
 
     if train_cfg.grad_clip:
         g_client, _ = clip_by_global_norm(
@@ -333,17 +351,18 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
 
     # ---- optimizer (masked to this round's fresh workers) ---------------
     _, opt_update = make_optimizer(train_cfg.optimizer)
+    okw = _opt_kwargs(train_cfg)
     lr = schedule(state.round_index)
     new_cstack, new_opt_c = opt_update(
         state.client_stack, g_client, state.opt_client, lr=lr,
-        weight_decay=train_cfg.weight_decay, mask=part_loc)
+        weight_decay=train_cfg.weight_decay, mask=part_loc, **okw)
     new_server, new_opt_s = opt_update(
         state.server_params, g_server, state.opt_server, lr=lr,
-        weight_decay=train_cfg.weight_decay)
+        weight_decay=train_cfg.weight_decay, **okw)
     new_edges, new_opt_e = [], []
     for ep, ge, oe in zip(state.edge_stages, g_edges, state.opt_edge):
         ne, no = opt_update(ep, ge, oe, lr=lr,
-                            weight_decay=train_cfg.weight_decay)
+                            weight_decay=train_cfg.weight_decay, **okw)
         new_edges.append(ne)
         new_opt_e.append(no)
     if plan is not None:
@@ -389,7 +408,11 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
                                      impl=impl, remat=remat)
             return loss
 
-        val_losses = _gather(_client_vmap(val_one)(new_cstack), ctx)
+        if chunk is not None:
+            vl_loc = _chunked_client_map(val_one, new_cstack, chunk)
+        else:
+            vl_loc = _client_vmap(val_one)(new_cstack)
+        val_losses = _gather(vl_loc, ctx)
         importance = wssl.compute_importance(val_losses, wssl_cfg,
                                              prev=state.importance)
     else:
@@ -533,7 +556,8 @@ def async_wssl_round(state: WSSLState, astate: AsyncState,
 
 
 def make_async_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
-                        train_cfg: TrainConfig, impl: str = "chunked"):
+                        train_cfg: TrainConfig, impl: str = "chunked", *,
+                        donate: bool = False):
     """jit-ready async round with static configs closed over.
 
     The returned function takes ``(state, astate, batch, val_batch,
@@ -541,19 +565,40 @@ def make_async_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
     params pytrees are dynamic, so one compiled executable serves every
     same-shape latency scenario, every deadline / staleness bound, every
     aggregation trim/f/m setting, and every compression rate / bit
-    width of a scheme kind."""
+    width of a scheme kind.
+
+    ``donate=False`` returns the legacy un-jitted partial;
+    ``donate=True`` returns the jitted round with BOTH the incoming
+    :class:`WSSLState` and :class:`AsyncState` donated
+    (``donate_argnums=(0, 1)``) — params, optimizer slots, EF residuals
+    and the stale-update buffer all alias their outputs.  Same
+    nested-jit caveat as ``make_round_fn``: never re-wrap the donating
+    fn in ``jax.jit``."""
     from repro.optim.schedule import make_schedule
     schedule = make_schedule(train_cfg.schedule, train_cfg.learning_rate,
                              train_cfg.warmup_steps, train_cfg.rounds)
-    return functools.partial(async_wssl_round, model_cfg=model_cfg,
-                             wssl_cfg=wssl_cfg, train_cfg=train_cfg,
-                             schedule=schedule, impl=impl)
+    fn = functools.partial(async_wssl_round, model_cfg=model_cfg,
+                           wssl_cfg=wssl_cfg, train_cfg=train_cfg,
+                           schedule=schedule, impl=impl)
+    if not donate:
+        return fn
+    jitted = jax.jit(fn, donate_argnums=(0, 1))
+
+    def round_fn(state, astate, batch, val_batch=None, scenario=None,
+                 async_p=None, agg_p=None, comp_p=None):
+        return jitted(state, astate, batch, val_batch, scenario, async_p,
+                      agg_p, comp_p)
+
+    round_fn.cache_size = lambda: jitted._cache_size()
+    round_fn._jitted = jitted
+    return round_fn
 
 
 def make_sharded_async_round_fn(model_cfg: ModelConfig,
                                 wssl_cfg: WSSLConfig,
                                 train_cfg: TrainConfig, mesh, *,
-                                impl: str = "chunked"):
+                                impl: str = "chunked",
+                                donate: bool = True):
     """Client-axis scale-out of :func:`async_wssl_round` — the async twin
     of ``core.round.make_sharded_round_fn`` (same mesh contract, same
     spec rules, same psum/all_gather crossings).  The stale-update buffer
@@ -617,7 +662,11 @@ def make_sharded_async_round_fn(model_cfg: ModelConfig,
                   rep),
         out_specs=(st_specs, astate_specs, rep),
         check_rep=False, auto=frozenset(auto))
-    jitted = jax.jit(mapped)
+    # donate state + astate (default on): the sharded stacks, optimizer
+    # slots and the stale-update buffer alias their outputs — one copy
+    # live at peak.  place_state/place_astate device_put copies, so
+    # host-built inputs survive the first donated call.
+    jitted = jax.jit(mapped, donate_argnums=(0, 1) if donate else ())
 
     def round_fn(state, astate, batch, val_batch=None, scenario=None,
                  async_p=None, agg_p=None, comp_p=None):

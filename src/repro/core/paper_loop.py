@@ -76,7 +76,12 @@ def resnet_adapter(cfg) -> ModelAdapter:
 # ---------------------------------------------------------------------------
 
 
-def _make_split_step(adapter: ModelAdapter, lr: float):
+def _make_split_step(adapter: ModelAdapter, lr: float,
+                     fused_adam: bool = False):
+    # fused_adam=True routes both stage updates through the fused
+    # masked-AdamW Pallas kernel (mask=None -> single always-on row);
+    # fp32 results are bit-identical to the unfused chain, so the knob
+    # is purely a perf choice (kernels/fused_adam.py)
     @functools.partial(jax.jit, static_argnames=("noise_sigma", "sign_flip"))
     def step(client_params, server_params, opt_c, opt_s, x, y,
              noise_rng, noise_sigma=0.0, sign_flip=False):
@@ -97,9 +102,11 @@ def _make_split_step(adapter: ModelAdapter, lr: float):
             from repro.sim.faults import add_gradient_noise
             g_client = add_gradient_noise(g_client, noise_rng, noise_sigma)
         new_c, opt_c = adamw_update(client_params, g_client, opt_c,
-                                    lr=lr, weight_decay=1e-4)
+                                    lr=lr, weight_decay=1e-4,
+                                    use_kernel=fused_adam)
         new_s, opt_s = adamw_update(server_params, res.grads_server, opt_s,
-                                    lr=lr, weight_decay=1e-4)
+                                    lr=lr, weight_decay=1e-4,
+                                    use_kernel=fused_adam)
         return new_c, new_s, opt_c, opt_s, res.loss
 
     return step
@@ -131,7 +138,8 @@ def train_wssl(adapter: ModelAdapter,
                local_steps: int = 10,
                lr: float = 1e-3,
                seed: int = 0,
-               scenario: Optional[Scenario] = None) -> Dict[str, Any]:
+               scenario: Optional[Scenario] = None,
+               fused_adam: bool = False) -> Dict[str, Any]:
     n = wssl_cfg.num_clients
     assert len(loaders) == n
     rng = jax.random.PRNGKey(seed)
@@ -140,7 +148,7 @@ def train_wssl(adapter: ModelAdapter,
     clients = [jax.tree.map(jnp.copy, client0) for _ in range(n)]
     opt_clients = [adamw_init(c) for c in clients]
     opt_server = adamw_init(server)
-    step = _make_split_step(adapter, lr)
+    step = _make_split_step(adapter, lr, fused_adam=fused_adam)
     evaluate = _make_eval(adapter)
 
     # ---- scenario faults (repro.sim), host-side at paper scale ----------

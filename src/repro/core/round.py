@@ -264,6 +264,201 @@ def _client_stage_bytes(client_stack: Params, n: int = 0) -> int:
                for l in jax.tree.leaves(client_stack))
 
 
+def _opt_kwargs(train_cfg: TrainConfig) -> Dict[str, Any]:
+    """Extra optimizer-update kwargs from the config: the fused-AdamW
+    kernel dispatch (adamw-only — config-validated)."""
+    if train_cfg.fused_adam and train_cfg.optimizer == "adamw":
+        return {"use_kernel": True}
+    return {}
+
+
+def _chunked_client_map(fn, cstack, chunk: int):
+    """Client-axis map in chunks: vmap ``fn`` over ``chunk`` clients per
+    lax.map step instead of all at once (the validation pass's O(chunk)
+    activation cap).  Leading leaf dim must divide by ``chunk``."""
+    n_loc = jax.tree.leaves(cstack)[0].shape[0]
+    k = n_loc // chunk
+    chunks = jax.tree.map(
+        lambda l: l.reshape((k, chunk) + l.shape[1:]), cstack)
+    out = jax.lax.map(lambda cs: _client_vmap(fn)(cs), chunks)
+    return out.reshape((n_loc,) + out.shape[2:])
+
+
+def _client_grads_chunked(client_stack: Params,
+                          edge_stages: Tuple[Params, ...],
+                          server_params: Params, tokens, labels, embeds,
+                          coef_loc: jax.Array, *, model_cfg: ModelConfig,
+                          train_cfg: TrainConfig, impl: str, chunk: int,
+                          n: int, n_loc: int, ctx: Optional[ShardCtx],
+                          comp_cfg, comp_p, compress_acts: bool, rng_sel):
+    """The per-client split fwd/bwd as a ``lax.scan`` over client chunks.
+
+    Semantically the flat vmap with the client axis reshaped to
+    ``(K, chunk)``: each scan step runs the full N-stage pipeline for
+    ``chunk`` clients, accumulating the weighted loss, the per-hop MoE
+    aux terms, and the shared server/edge gradients in the carry while
+    stacking the per-client outputs (losses, client-stage grads).  Live
+    activation memory is O(chunk) instead of O(n_loc); the stacked
+    ``g_client`` output is unavoidable either way (the optimizer needs
+    every client's gradient).  Differences vs the flat trace, all
+    documented in docs/scaling.md:
+
+    * shared-stage gradients and the loss re-associate the client
+      reduction per chunk (fp band, same class as the sharded psum);
+    * activation-compression rngs fold in the chunk index (the flat
+      round draws one (N, ...) tensor per hop; per-chunk draws
+      necessarily differ);
+    * no per-hop ``shard_activation`` constraint inside the scan —
+      chunking targets the per-shard/ single-device activation peak, the
+      client-axis layout is already fixed by the surrounding shard_map.
+
+    ``coef_loc`` is the (n_loc,) per-client CE weight (agg_w · mask).
+    Returns ``(loss, pcl, g_client, g_server, g_edges, hop_bytes,
+    act_wire_bytes)`` matching the flat block's outputs.
+    """
+    if n_loc % chunk:
+        raise ValueError(
+            f"client_chunk={chunk} must divide the per-shard client count "
+            f"{n_loc} (num_clients"
+            f"{'/num_shards' if ctx is not None else ''})")
+    k = n_loc // chunk
+    remat = train_cfg.remat
+    span = train_cfg.remat_span
+    num_edges = len(edge_stages)
+
+    def _rechunk(a):
+        return a.reshape((k, chunk) + a.shape[1:])
+
+    xs = {"cs": jax.tree.map(_rechunk, client_stack),
+          "toks": _rechunk(tokens), "labs": _rechunk(labels),
+          "coef": _rechunk(coef_loc), "idx": jnp.arange(k)}
+    if embeds is not None:
+        xs["emb"] = _rechunk(embeds)
+
+    # per-hop wire/byte shapes are static — recorded as the scan body
+    # traces, consumed after (identical to the flat round's accounting)
+    recorded: Dict[str, Any] = {}
+
+    def body(carry, xc):
+        loss_acc, aux_acc, gs_acc, ge_acc = carry
+        cs, toks, labs = xc["cs"], xc["toks"], xc["labs"]
+        coef, ci = xc["coef"], xc["idx"]
+        emb = xc.get("emb")
+
+        def client_fn(cstack):
+            def one(cp, tks, em):
+                return tf.client_forward(cp, model_cfg, tks, embeds=em,
+                                         impl=impl, remat=remat,
+                                         remat_span=span)
+            if emb is not None:
+                return _client_vmap(one)(cstack, toks, emb)
+            return _client_vmap(lambda cp, t: one(cp, t, None))(cstack,
+                                                                toks)
+
+        acts, client_vjp = jax.vjp(client_fn, cs)
+        hop_b = [acts.size // acts.shape[0] * acts.dtype.itemsize]
+        wire_shapes = [(acts.size // acts.shape[0] // acts.shape[-1],
+                        acts.shape[-1])]
+        if compress_acts:
+            acts = compress_mod.compress_activations(
+                acts, jax.random.fold_in(
+                    jax.random.fold_in(rng_sel, 0xAC0), ci),
+                comp_cfg, comp_p)
+
+        x, edge_vjps = acts, []
+        aux_sum = jnp.zeros((), jnp.float32)
+        for j in range(num_edges):
+            def edge_fn(p, a, j=j):
+                return _client_vmap(
+                    lambda pi, ai: tf.stage_forward(
+                        pi, model_cfg, ai, j + 1, impl=impl, remat=remat,
+                        remat_span=span, with_aux=True),
+                    in_axes=(None, 0))(p, a)
+            (x, aux_j), vjp = jax.vjp(edge_fn, edge_stages[j], x)
+            aux_sum = aux_sum + aux_j.sum()
+            edge_vjps.append(vjp)
+            hop_b.append(x.size // x.shape[0] * x.dtype.itemsize)
+            wire_shapes.append((x.size // x.shape[0] // x.shape[-1],
+                                x.shape[-1]))
+            if compress_acts:
+                x = compress_mod.compress_activations(
+                    x, jax.random.fold_in(
+                        jax.random.fold_in(rng_sel, 0xAC1 + j), ci),
+                    comp_cfg, comp_p)
+
+        def server_loss(sp, a):
+            losses, aux = _per_client_losses(model_cfg, sp, a, labs, impl,
+                                             remat, span)
+            # the server MoE aux is a mean over the clients in view (here
+            # one chunk); chunk/n reweights so the chunk sum completes
+            # the global client mean exactly as the flat/psum paths do
+            return jnp.sum(coef * losses) + aux * (chunk / n), losses
+
+        (l_c, pcl_c), (gs_c, g_x) = jax.value_and_grad(
+            server_loss, argnums=(0, 1), has_aux=True)(server_params, x)
+
+        if compress_acts:
+            g_x = compress_mod.compress_activations(
+                g_x, jax.random.fold_in(
+                    jax.random.fold_in(rng_sel, 0xDC0 + num_edges), ci),
+                comp_cfg, comp_p)
+        aux_ct = jnp.full((chunk,), 1.0 / n, jnp.float32)
+        ge_list = []
+        for back_j, vjp in enumerate(reversed(edge_vjps)):
+            g_e, g_x = vjp((g_x, aux_ct))
+            if compress_acts:
+                g_x = compress_mod.compress_activations(
+                    g_x, jax.random.fold_in(
+                        jax.random.fold_in(
+                            rng_sel, 0xDC0 + num_edges - 1 - back_j), ci),
+                    comp_cfg, comp_p)
+            ge_list.append(g_e)
+        ge_list.reverse()
+        (g_cs,) = client_vjp(g_x)
+
+        recorded["hop_bytes"] = hop_b
+        recorded["wire_shapes"] = wire_shapes
+        add32 = lambda a, b: a + b.astype(jnp.float32)
+        carry = (loss_acc + l_c, aux_acc + aux_sum,
+                 jax.tree.map(add32, gs_acc, gs_c),
+                 tuple(jax.tree.map(add32, ga, gc)
+                       for ga, gc in zip(ge_acc, ge_list)))
+        return carry, (pcl_c, g_cs)
+
+    z32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    carry0 = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+              jax.tree.map(z32, server_params),
+              tuple(jax.tree.map(z32, e) for e in edge_stages))
+    (loss_local, aux_acc, gs_acc, ge_acc), (pcl_k, gcl_k) = jax.lax.scan(
+        body, carry0, xs)
+
+    pcl = pcl_k.reshape((n_loc,) + pcl_k.shape[2:])
+    g_client = jax.tree.map(
+        lambda l: l.reshape((n_loc,) + l.shape[2:]), gcl_k)
+    # the fp32 chunk accumulators cast back to the param dtype the flat
+    # vjp would have produced, then complete the cross-shard reduction
+    g_server = _psum(jax.tree.map(lambda a, p: a.astype(p.dtype),
+                                  gs_acc, server_params), ctx)
+    g_edges = [_psum(jax.tree.map(lambda a, p: a.astype(p.dtype), ga, ep),
+                     ctx)
+               for ga, ep in zip(ge_acc, edge_stages)]
+    edge_aux = aux_acc / n_loc
+    if ctx is not None:
+        loss = jax.lax.psum(loss_local, ctx.axis)
+        edge_aux = jax.lax.psum(edge_aux, ctx.axis) / ctx.num_shards
+    else:
+        loss = loss_local
+    loss = loss + edge_aux
+
+    act_wire_bytes = []
+    if compress_acts:
+        act_wire_bytes = [
+            compress_mod.activation_wire_bytes(t, f, comp_cfg, comp_p)
+            for t, f in recorded["wire_shapes"]]
+    return (loss, pcl, g_client, g_server, g_edges,
+            recorded["hop_bytes"], act_wire_bytes)
+
+
 def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
                val_batch: Optional[Dict[str, jax.Array]] = None,
                scenario: Optional["sim_faults.ScenarioParams"] = None,
@@ -363,100 +558,119 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
 
     # ---- Algorithm 2 steps 2-4: split fwd / chained N-phase backward ----
     span = train_cfg.remat_span
+    chunk = train_cfg.client_chunk
+    if chunk is not None:
+        # client-chunked scan: O(chunk) activation peak, flat semantics
+        # (documented fp band — see _client_grads_chunked)
+        (loss, pcl, g_client, g_server, g_edges, hop_bytes,
+         act_wire_bytes) = _client_grads_chunked(
+            state.client_stack, state.edge_stages, state.server_params,
+            tokens, labels, embeds, agg_w_loc * mask_loc,
+            model_cfg=model_cfg, train_cfg=train_cfg, impl=impl,
+            chunk=chunk, n=n, n_loc=n_loc, ctx=ctx, comp_cfg=comp_cfg,
+            comp_p=comp_p, compress_acts=compress_acts, rng_sel=rng_sel)
+    else:
+        def client_fn(cstack):
+            def one(cp, toks, emb):
+                return tf.client_forward(cp, model_cfg, toks, embeds=emb,
+                                         impl=impl, remat=remat,
+                                         remat_span=span)
+            if embeds is not None:
+                return _client_vmap(one)(cstack, tokens, embeds)
+            return _client_vmap(lambda cp, t: one(cp, t, None))(cstack,
+                                                                tokens)
 
-    def client_fn(cstack):
-        def one(cp, toks, emb):
-            return tf.client_forward(cp, model_cfg, toks, embeds=emb,
-                                     impl=impl, remat=remat, remat_span=span)
-        if embeds is not None:
-            return _client_vmap(one)(cstack, tokens, embeds)
-        return _client_vmap(lambda cp, t: one(cp, t, None))(cstack, tokens)
-
-    acts, client_vjp = jax.vjp(client_fn, state.client_stack)
-    acts = shard_activation(acts, "client", None, None, None)
-    hop_bytes = [acts.size // acts.shape[0] * acts.dtype.itemsize]
-    act_wire_bytes = []
-    if compress_acts:
-        acts = compress_mod.compress_activations(
-            acts, jax.random.fold_in(rng_sel, 0xAC0), comp_cfg, comp_p)
-        act_wire_bytes.append(compress_mod.activation_wire_bytes(
-            acts.size // acts.shape[0] // acts.shape[-1], acts.shape[-1],
-            comp_cfg, comp_p))
-
-    # forward relay through the shared edge stages (per-client activations,
-    # shared params: vmap over the client axis with in_axes=None params).
-    # Each edge stage also reports its MoE aux loss so the objective stays
-    # invariant to where the cuts sit.
-    x, edge_vjps = acts, []
-    edge_aux = jnp.zeros((), jnp.float32)
-    for j in range(num_edges):
-        def edge_fn(p, a, j=j):
-            return _client_vmap(
-                lambda pi, ai: tf.stage_forward(pi, model_cfg, ai, j + 1,
-                                                impl=impl, remat=remat,
-                                                remat_span=span,
-                                                with_aux=True),
-                in_axes=(None, 0))(p, a)
-        (x, aux_j), vjp = jax.vjp(edge_fn, state.edge_stages[j], x)
-        x = shard_activation(x, "client", None, None, None)
-        # aux_j.mean() is the mean over the clients in view; with a ctx
-        # that view is local, so psum/S completes the global mean exactly
-        # (equal shard sizes)
-        edge_aux = edge_aux + (
-            _psum(aux_j.mean(), ctx) / ctx.num_shards
-            if ctx is not None else aux_j.mean())
-        edge_vjps.append(vjp)
-        hop_bytes.append(x.size // x.shape[0] * x.dtype.itemsize)
+        acts, client_vjp = jax.vjp(client_fn, state.client_stack)
+        acts = shard_activation(acts, "client", None, None, None)
+        hop_bytes = [acts.size // acts.shape[0] * acts.dtype.itemsize]
+        act_wire_bytes = []
         if compress_acts:
-            x = compress_mod.compress_activations(
-                x, jax.random.fold_in(rng_sel, 0xAC1 + j), comp_cfg, comp_p)
+            acts = compress_mod.compress_activations(
+                acts, jax.random.fold_in(rng_sel, 0xAC0), comp_cfg, comp_p)
             act_wire_bytes.append(compress_mod.activation_wire_bytes(
-                x.size // x.shape[0] // x.shape[-1], x.shape[-1],
-                comp_cfg, comp_p))
+                acts.size // acts.shape[0] // acts.shape[-1],
+                acts.shape[-1], comp_cfg, comp_p))
 
-    def server_loss(sp, a):
-        losses, aux = _per_client_losses(model_cfg, sp, a, labels, impl,
-                                         remat, span)
-        local = jnp.sum(agg_w_loc * mask_loc * losses)
-        if ctx is not None:
-            # the CE term sums over all clients; the MoE aux is a mean
-            # over clients, so psum of per-shard means / S completes it
-            total = (jax.lax.psum(local, ctx.axis)
-                     + jax.lax.psum(aux, ctx.axis) / ctx.num_shards)
-        else:
-            total = local + aux
-        return total, losses
+        # forward relay through the shared edge stages (per-client
+        # activations, shared params: vmap over the client axis with
+        # in_axes=None params).  Each edge stage also reports its MoE aux
+        # loss so the objective stays invariant to where the cuts sit.
+        x, edge_vjps = acts, []
+        edge_aux = jnp.zeros((), jnp.float32)
+        for j in range(num_edges):
+            def edge_fn(p, a, j=j):
+                return _client_vmap(
+                    lambda pi, ai: tf.stage_forward(pi, model_cfg, ai,
+                                                    j + 1, impl=impl,
+                                                    remat=remat,
+                                                    remat_span=span,
+                                                    with_aux=True),
+                    in_axes=(None, 0))(p, a)
+            (x, aux_j), vjp = jax.vjp(edge_fn, state.edge_stages[j], x)
+            x = shard_activation(x, "client", None, None, None)
+            # aux_j.mean() is the mean over the clients in view; with a
+            # ctx that view is local, so psum/S completes the global mean
+            # exactly (equal shard sizes)
+            edge_aux = edge_aux + (
+                _psum(aux_j.mean(), ctx) / ctx.num_shards
+                if ctx is not None else aux_j.mean())
+            edge_vjps.append(vjp)
+            hop_bytes.append(x.size // x.shape[0] * x.dtype.itemsize)
+            if compress_acts:
+                x = compress_mod.compress_activations(
+                    x, jax.random.fold_in(rng_sel, 0xAC1 + j), comp_cfg,
+                    comp_p)
+                act_wire_bytes.append(compress_mod.activation_wire_bytes(
+                    x.size // x.shape[0] // x.shape[-1], x.shape[-1],
+                    comp_cfg, comp_p))
 
-    (loss, pcl), (g_server, g_x) = jax.value_and_grad(
-        server_loss, argnums=(0, 1), has_aux=True)(state.server_params, x)
-    loss = loss + edge_aux
-    # with a ctx the vjp ran per shard on a replicated server stage — each
-    # shard's g_server carries only its local clients' contribution; the
-    # psum completes the global gradient (and keeps it replicated)
-    g_server = _psum(g_server, ctx)
+        def server_loss(sp, a):
+            losses, aux = _per_client_losses(model_cfg, sp, a, labels,
+                                             impl, remat, span)
+            local = jnp.sum(agg_w_loc * mask_loc * losses)
+            if ctx is not None:
+                # the CE term sums over all clients; the MoE aux is a mean
+                # over clients, so psum of per-shard means / S completes it
+                total = (jax.lax.psum(local, ctx.axis)
+                         + jax.lax.psum(aux, ctx.axis) / ctx.num_shards)
+            else:
+                total = local + aux
+            return total, losses
 
-    # backward relay: inject each hop's cotangent upstream (the mean-aux
-    # term contributes 1/N per client alongside the activation cotangent)
-    if compress_acts:
-        # down-hop wire compression: the returned server→edge gradient is
-        # itself a (N, b, s, d) activation-shaped tensor; chaining the
-        # lossy reconstruction into the manual vjp relay makes the
-        # backward a straight-through estimate of the compressed forward
-        g_x = compress_mod.compress_activations(
-            g_x, jax.random.fold_in(rng_sel, 0xDC0 + num_edges), comp_cfg,
-            comp_p)
-    aux_ct = jnp.full((n_loc,), 1.0 / n, jnp.float32)
-    g_edges = []
-    for back_j, vjp in enumerate(reversed(edge_vjps)):
-        g_e, g_x = vjp((g_x, aux_ct))
+        (loss, pcl), (g_server, g_x) = jax.value_and_grad(
+            server_loss, argnums=(0, 1), has_aux=True)(
+                state.server_params, x)
+        loss = loss + edge_aux
+        # with a ctx the vjp ran per shard on a replicated server stage —
+        # each shard's g_server carries only its local clients'
+        # contribution; the psum completes the global gradient (and keeps
+        # it replicated)
+        g_server = _psum(g_server, ctx)
+
+        # backward relay: inject each hop's cotangent upstream (the
+        # mean-aux term contributes 1/N per client alongside the
+        # activation cotangent)
         if compress_acts:
+            # down-hop wire compression: the returned server→edge gradient
+            # is itself a (N, b, s, d) activation-shaped tensor; chaining
+            # the lossy reconstruction into the manual vjp relay makes the
+            # backward a straight-through estimate of the compressed
+            # forward
             g_x = compress_mod.compress_activations(
-                g_x, jax.random.fold_in(rng_sel,
-                                        0xDC0 + num_edges - 1 - back_j),
+                g_x, jax.random.fold_in(rng_sel, 0xDC0 + num_edges),
                 comp_cfg, comp_p)
-        g_edges.append(_psum(g_e, ctx))
-    g_edges.reverse()
-    (g_client,) = client_vjp(g_x)
+        aux_ct = jnp.full((n_loc,), 1.0 / n, jnp.float32)
+        g_edges = []
+        for back_j, vjp in enumerate(reversed(edge_vjps)):
+            g_e, g_x = vjp((g_x, aux_ct))
+            if compress_acts:
+                g_x = compress_mod.compress_activations(
+                    g_x, jax.random.fold_in(rng_sel,
+                                            0xDC0 + num_edges - 1 - back_j),
+                    comp_cfg, comp_p)
+            g_edges.append(_psum(g_e, ctx))
+        g_edges.reverse()
+        (g_client,) = client_vjp(g_x)
 
     if train_cfg.grad_clip:
         g_client, _ = clip_by_global_norm(
@@ -479,17 +693,18 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
 
     # ---- optimizer (masked for unselected clients) ---------------------
     _, opt_update = make_optimizer(train_cfg.optimizer)
+    okw = _opt_kwargs(train_cfg)
     lr = schedule(state.round_index)
     new_cstack, new_opt_c = opt_update(
         state.client_stack, g_client, state.opt_client, lr=lr,
-        weight_decay=train_cfg.weight_decay, mask=mask_loc)
+        weight_decay=train_cfg.weight_decay, mask=mask_loc, **okw)
     new_server, new_opt_s = opt_update(
         state.server_params, g_server, state.opt_server, lr=lr,
-        weight_decay=train_cfg.weight_decay)
+        weight_decay=train_cfg.weight_decay, **okw)
     new_edges, new_opt_e = [], []
     for ep, ge, oe in zip(state.edge_stages, g_edges, state.opt_edge):
         ne, no = opt_update(ep, ge, oe, lr=lr,
-                            weight_decay=train_cfg.weight_decay)
+                            weight_decay=train_cfg.weight_decay, **okw)
         new_edges.append(ne)
         new_opt_e.append(no)
     if plan is not None:
@@ -532,7 +747,11 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
                                      impl=impl, remat=remat)
             return loss
 
-        val_losses = _gather(_client_vmap(val_one)(new_cstack), ctx)
+        if chunk is not None:
+            vl_loc = _chunked_client_map(val_one, new_cstack, chunk)
+        else:
+            vl_loc = _client_vmap(val_one)(new_cstack)
+        val_losses = _gather(vl_loc, ctx)
         importance = wssl.compute_importance(val_losses, wssl_cfg,
                                              prev=state.importance)
     else:
@@ -626,14 +845,37 @@ def wssl_round(state: WSSLState, batch: Dict[str, jax.Array],
 
 
 def make_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
-                  train_cfg: TrainConfig, impl: str = "chunked"):
-    """jit-ready round function with static configs closed over."""
+                  train_cfg: TrainConfig, impl: str = "chunked", *,
+                  donate: bool = False):
+    """jit-ready round function with static configs closed over.
+
+    ``donate=False`` (the legacy contract) returns an un-jitted partial —
+    callers wrap it in ``jax.jit`` themselves.  ``donate=True`` returns
+    the already-jitted round with the incoming :class:`WSSLState`
+    donated (``donate_argnums=(0,)``): params, optimizer slots and EF
+    residuals alias their outputs, so ONE copy of per-client state is
+    live at peak instead of two.  The donating fn must NOT be wrapped in
+    another ``jax.jit`` — nested jit silently drops inner donation (no
+    warning on CPU) — which is why donation is opt-in here rather than a
+    flag on the partial.  Exposes ``cache_size()`` for the
+    one-executable regression."""
     from repro.optim.schedule import make_schedule
     schedule = make_schedule(train_cfg.schedule, train_cfg.learning_rate,
                              train_cfg.warmup_steps, train_cfg.rounds)
-    return functools.partial(wssl_round, model_cfg=model_cfg,
-                             wssl_cfg=wssl_cfg, train_cfg=train_cfg,
-                             schedule=schedule, impl=impl)
+    fn = functools.partial(wssl_round, model_cfg=model_cfg,
+                           wssl_cfg=wssl_cfg, train_cfg=train_cfg,
+                           schedule=schedule, impl=impl)
+    if not donate:
+        return fn
+    jitted = jax.jit(fn, donate_argnums=(0,))
+
+    def round_fn(state, batch, val_batch=None, scenario=None, agg_p=None,
+                 comp_p=None):
+        return jitted(state, batch, val_batch, scenario, agg_p, comp_p)
+
+    round_fn.cache_size = lambda: jitted._cache_size()
+    round_fn._jitted = jitted
+    return round_fn
 
 
 def _linear_shard_index(dp, mesh) -> jax.Array:
@@ -648,7 +890,7 @@ def _linear_shard_index(dp, mesh) -> jax.Array:
 
 def make_sharded_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
                           train_cfg: TrainConfig, mesh, *,
-                          impl: str = "chunked"):
+                          impl: str = "chunked", donate: bool = True):
     """Client-axis scale-out: :func:`wssl_round` shard_map-ed over the
     data axes of ``mesh``.
 
@@ -715,7 +957,11 @@ def make_sharded_round_fn(model_cfg: ModelConfig, wssl_cfg: WSSLConfig,
         in_specs=(st_specs, client_spec, rep, rep, rep, rep),
         out_specs=(st_specs, rep),
         check_rep=False, auto=frozenset(auto))
-    jitted = jax.jit(mapped)
+    # donate the incoming WSSLState (default on): the new state aliases
+    # the old, so one copy of the sharded per-client stacks + optimizer
+    # slots is live at peak.  place_state device_puts a *copy*, so the
+    # caller's host-built state survives the first donated call.
+    jitted = jax.jit(mapped, donate_argnums=(0,) if donate else ())
 
     def round_fn(state, batch, val_batch=None, scenario=None, agg_p=None,
                  comp_p=None):

@@ -11,4 +11,11 @@ oracle) convention, with shape/dtype sweep tests in tests/test_kernels.py:
 * rg_lru          — RG-LRU recurrence (width-blocked sequential scan)
 * wavg            — WSSL's fused weighted client-parameter aggregation
                     (single-pass over stacked client stages)
+* fused_adam      — fused masked-AdamW optimizer step: one streaming
+                    read of (p, g, m, v, mask), one write of
+                    (p', m', v'), hypers as a (9,) dynamic scalar vector
+* compress        — stochastic int8/int4 quantize / dequantize / top-k
+                    mask for the update wire path
+* paged_attention — gather-free one-token decode attention over the
+                    paged KV block pool
 """

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import compress as _compress
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_adam as _fadam
 from repro.kernels import paged_attention as _pa
 from repro.kernels import rg_lru as _lru
 from repro.kernels import ssd_scan as _ssd
@@ -76,6 +77,35 @@ def weighted_average(stacked: jax.Array, weights: jax.Array,
     out = _wavg.weighted_average_2d(flat, weights, block_m=block_m,
                                     interpret=not _on_tpu())
     return out.reshape(stacked.shape[1:])
+
+
+def fused_adamw(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
+                mask: Optional[jax.Array], scalars: jax.Array,
+                *, block_m: int = 2048):
+    """Fused masked-AdamW step over one leaf -> (p', m', v').
+
+    Any-rank leaves.  With ``mask`` (per-client stacked stage, leaves
+    (N, ...)) the leading axis is the client axis and masked rows keep
+    p/m/v bit-identical; with ``mask=None`` (shared server/edge stage)
+    the leaf flattens to a single always-on row.  ``scalars`` is the
+    (9,) fp32 hyper vector (see kernels/fused_adam.py) — a traced input,
+    so lr/wd/step changes never recompile.  Empty leaves short-circuit:
+    nothing to step, and the kernel's grid math cannot divide by a zero
+    block."""
+    if mask is not None:
+        n = p.shape[0]
+        rows = mask.astype(jnp.float32)
+    else:
+        n = 1
+        rows = jnp.ones((1,), jnp.float32)
+    pf, gf = p.reshape(n, -1), g.reshape(n, -1)
+    mf, vf = m.reshape(n, -1), v.reshape(n, -1)
+    if pf.shape[1] == 0:
+        return p, m.astype(jnp.float32), v.astype(jnp.float32)
+    po, mo, vo = _fadam.fused_adamw_2d(pf, gf, mf, vf, rows, scalars,
+                                       block_m=block_m,
+                                       interpret=not _on_tpu())
+    return po.reshape(p.shape), mo.reshape(m.shape), vo.reshape(v.shape)
 
 
 def quantize_stochastic(x: jax.Array, u: jax.Array, inv_step: jax.Array,

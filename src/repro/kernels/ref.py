@@ -134,6 +134,30 @@ def dequantize_2d(q: jax.Array, step: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * step.astype(jnp.float32)[:, None]
 
 
+def fused_adamw_2d(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array,
+                   mask: jax.Array, scalars: jax.Array):
+    """Masked-AdamW oracle (kernels/fused_adam.py).  p, g: (N, M);
+    m, v: (N, M) fp32; mask: (N,); scalars: (9,) fp32 =
+    [lr, β₁, β₂, 1−β₁, 1−β₂, ε, wd, bc₁, bc₂].  Same fp32 op order as
+    the kernel, so fp32 params match bit-for-bit."""
+    s = scalars.astype(jnp.float32)
+    lr, b1, b2, omb1, omb2 = s[0], s[1], s[2], s[3], s[4]
+    eps, wd, bc1, bc2 = s[5], s[6], s[7], s[8]
+    p32 = p.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    m32 = m.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    m_new = b1 * m32 + omb1 * g32
+    v_new = b2 * v32 + omb2 * jnp.square(g32)
+    mhat = m_new / bc1
+    vhat = v_new / bc2
+    p_new = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p32)
+    mk = mask.astype(jnp.float32)[:, None]
+    return ((mk * p_new + (1 - mk) * p32).astype(p.dtype),
+            mk * m_new + (1 - mk) * m32,
+            mk * v_new + (1 - mk) * v32)
+
+
 def topk_mask_2d(x: jax.Array, thresh: jax.Array) -> jax.Array:
     """Zero every entry whose magnitude is below the per-row threshold."""
     xf = x.astype(jnp.float32)

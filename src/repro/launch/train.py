@@ -36,6 +36,13 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--participation", type=float, default=0.5)
     ap.add_argument("--impl", default="dense")
+    ap.add_argument("--client-chunk", type=int, default=None,
+                    help="scan the per-client forward/backward in chunks "
+                         "of this many clients (must divide --clients); "
+                         "caps activation memory at O(chunk)")
+    ap.add_argument("--fused-adam", action="store_true",
+                    help="fused masked-AdamW Pallas kernel instead of the "
+                         "unfused tree.map optimizer chain")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log", default=None)
@@ -47,12 +54,16 @@ def main() -> None:
     wssl_cfg = WSSLConfig(num_clients=args.clients,
                           participation_fraction=args.participation)
     train_cfg = TrainConfig(rounds=args.rounds, learning_rate=args.lr,
-                            remat=not args.reduced)
+                            remat=not args.reduced,
+                            client_chunk=args.client_chunk,
+                            fused_adam=args.fused_adam)
 
     state, _ = init_state(jax.random.PRNGKey(args.seed), cfg, wssl_cfg,
                           train_cfg)
-    round_fn = jax.jit(make_round_fn(cfg, wssl_cfg, train_cfg,
-                                     impl=args.impl))
+    # donate=True: the incoming state aliases the round's output, so one
+    # copy of the per-client stacks + optimizer slots is live at peak
+    round_fn = make_round_fn(cfg, wssl_cfg, train_cfg, impl=args.impl,
+                             donate=True)
 
     n, b, s = args.clients, args.batch_per_client, args.seq_len
     vd = lm_batch(args.val_batch, s, cfg.vocab_size, seed=10_000)

@@ -36,11 +36,36 @@ def adamw_init(params: Params) -> AdamState:
 
 def adamw_update(params: Params, grads: Params, state: AdamState, *,
                  lr, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.01,
-                 mask: Optional[jax.Array] = None) -> Tuple[Params, AdamState]:
+                 mask: Optional[jax.Array] = None,
+                 use_kernel: bool = False) -> Tuple[Params, AdamState]:
+    """use_kernel=True dispatches every leaf through the fused
+    masked-AdamW Pallas kernel (kernels/fused_adam.py): one streaming
+    read of (p, g, m, v, mask) and one write of (p', m', v') instead of
+    the ~8 HBM passes of the unfused tree.map chain.  All hypers reach
+    the kernel as a (9,) traced scalar vector, so one executable serves
+    every lr / weight-decay / step; (1−β) and the bias corrections are
+    computed here with the same op order as the unfused path, keeping
+    fp32 results bit-identical between the two paths."""
     step = state.step + 1
     t = step.astype(jnp.float32)
     bc1 = 1.0 - beta1 ** t
     bc2 = 1.0 - beta2 ** t
+
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        scalars = jnp.stack([jnp.asarray(x, jnp.float32) for x in
+                             (lr, beta1, beta2, 1 - beta1, 1 - beta2,
+                              eps, weight_decay, bc1, bc2)])
+        out = jax.tree.map(
+            lambda p, g, m, v: _kops.fused_adamw(p, g, m, v, mask, scalars),
+            params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamState(step=step, m=new_m, v=new_v)
 
     def upd(p, g, m, v):
         g = g.astype(jnp.float32)
@@ -73,6 +98,12 @@ def sgd_init(params: Params) -> SgdState:
 def sgd_update(params: Params, grads: Params, state: SgdState, *,
                lr, momentum=0.9, weight_decay=0.0,
                mask: Optional[jax.Array] = None) -> Tuple[Params, SgdState]:
+    """Masked rows keep params AND momentum bit-identical: the blend
+    ``mk·new + (1−mk)·old`` at mk=0 reduces to ``0·new + 1·old`` where
+    ``new`` is always finite (no division in the SGD step), so a
+    non-participant's momentum cannot drift — the same moment-freeze
+    contract as the Adam path (property-tested in
+    tests/test_substrate.py for both optimizers)."""
     def upd(p, g, m):
         g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
         m_new = momentum * m + g

@@ -1,0 +1,109 @@
+"""Buffer-donation regressions for the training-round factories
+(docs/scaling.md "Training-round memory model").
+
+The donating factories (``make_round_fn(donate=True)`` /
+``make_async_round_fn(donate=True)``) alias the incoming WSSLState (and
+AsyncState) with the round's output so ONE copy of per-client state is
+live at peak.  Three contracts:
+
+* values: donation changes buffers, never numbers — donated rounds are
+  bit-for-bit identical to non-donating rounds (the goldens in
+  test_round_regression.py also run donated);
+* deletion: after a donated call every leaf of the *old* state reports
+  ``is_deleted()`` — the backing buffers were actually reused, not
+  copied (the regression that catches jax silently dropping donation,
+  e.g. when the donating fn is re-wrapped in an outer jit);
+* census: across rounds the resident bytes of round state stay at one
+  copy, and the executable count stays at one.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, TrainConfig, WSSLConfig
+from repro.core.async_round import (init_async_state, make_async_round_fn)
+from repro.core.round import init_state, make_round_fn
+from repro.data.synthetic import lm_batch
+
+TINY = ModelConfig(name="tiny-donate", num_layers=2, d_model=32, num_heads=2,
+                   num_kv_heads=2, d_ff=64, vocab_size=64,
+                   dtype="float32", param_dtype="float32")
+W = WSSLConfig(num_clients=4, participation_fraction=0.5)
+T = TrainConfig(remat=False, learning_rate=1e-3, warmup_steps=0,
+                schedule="constant")
+
+
+def _batches():
+    vd = lm_batch(4, 16, TINY.vocab_size, seed=999)
+    val = {"tokens": jnp.asarray(vd["tokens"]),
+           "labels": jnp.asarray(vd["labels"])}
+    batches = []
+    for r in range(2):
+        d = lm_batch(8, 16, TINY.vocab_size, seed=r)
+        batches.append(
+            {"tokens": jnp.asarray(d["tokens"]).reshape(4, 2, 16),
+             "labels": jnp.asarray(d["labels"]).reshape(4, 2, 16)})
+    return val, batches
+
+
+def test_donated_round_bit_for_bit_vs_nondonating():
+    val, batches = _batches()
+    rf_d = make_round_fn(TINY, W, T, impl="dense", donate=True)
+    rf_n = jax.jit(make_round_fn(TINY, W, T, impl="dense"))
+    sd, _ = init_state(jax.random.PRNGKey(0), TINY, W, T)
+    sn, _ = init_state(jax.random.PRNGKey(0), TINY, W, T)
+    for b in batches:
+        sd, md = rf_d(sd, b, val)
+        sn, mn = rf_n(sn, b, val)
+    for a, b in zip(jax.tree.leaves((sd, md)), jax.tree.leaves((sn, mn))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_donation_deletes_old_state_leaves():
+    val, batches = _batches()
+    rf = make_round_fn(TINY, W, T, impl="dense", donate=True)
+    state, _ = init_state(jax.random.PRNGKey(0), TINY, W, T)
+    old = state
+    state, _ = rf(state, batches[0], val)
+    assert all(l.is_deleted() for l in jax.tree.leaves(old)), \
+        "donation dropped: old WSSLState buffers still live after the call"
+    assert not any(l.is_deleted() for l in jax.tree.leaves(state))
+    assert rf.cache_size() == 1
+
+
+def test_donation_one_copy_census_across_rounds():
+    """Round-over-round the state footprint must not grow: each donated
+    call deletes its input, so exactly one state copy's worth of those
+    leaves is resident after every round."""
+    val, batches = _batches()
+    rf = make_round_fn(TINY, W, T, impl="dense", donate=True)
+    state, _ = init_state(jax.random.PRNGKey(0), TINY, W, T)
+    copies = []
+    for b in batches:
+        prev = state
+        state, _ = rf(state, b, val)
+        live = [l for l in jax.tree.leaves((prev, state))
+                if not l.is_deleted()]
+        want = sum(l.nbytes for l in jax.tree.leaves(state))
+        copies.append(sum(l.nbytes for l in live) / want)
+    assert copies == [1.0, 1.0]
+    assert rf.cache_size() == 1
+
+
+def test_async_donation_deletes_both_states_and_matches():
+    val, batches = _batches()
+    rf_d = make_async_round_fn(TINY, W, T, impl="dense", donate=True)
+    rf_n = jax.jit(make_async_round_fn(TINY, W, T, impl="dense"))
+    sd, _ = init_state(jax.random.PRNGKey(0), TINY, W, T)
+    sn, _ = init_state(jax.random.PRNGKey(0), TINY, W, T)
+    ad, an = init_async_state(sd), init_async_state(sn)
+    old_s, old_a = sd, ad
+    for b in batches:
+        sd, ad, md = rf_d(sd, ad, b, val)
+        sn, an, mn = rf_n(sn, an, b, val)
+    assert all(l.is_deleted() for l in jax.tree.leaves((old_s, old_a)))
+    for a, b in zip(jax.tree.leaves((sd, ad, md)),
+                    jax.tree.leaves((sn, an, mn))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert rf_d.cache_size() == 1

@@ -174,3 +174,129 @@ def test_wavg_matches_tree_aggregation():
     want = wssl.weighted_average(tree, w, use_kernel=False)
     for g, x in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_allclose(np.asarray(g), np.asarray(x), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused masked-AdamW (optimizer hot path)
+# ---------------------------------------------------------------------------
+
+def _adam_problem(n, m, dtype=jnp.float32, mask=None):
+    p = _rand((n, m), dtype)
+    g = _rand((n, m), dtype, scale=1e-2)
+    mm = _rand((n, m), jnp.float32, scale=1e-2)
+    v = jnp.abs(_rand((n, m), jnp.float32, scale=1e-4))
+    if mask is None:
+        mask = jnp.asarray(RNG.integers(0, 2, size=n), jnp.float32)
+    # step=3 bias corrections, computed exactly as adamw_update does
+    t = jnp.float32(3.0)
+    b1, b2 = 0.9, 0.95
+    s = jnp.stack([jnp.asarray(x, jnp.float32) for x in
+                   (3e-3, b1, b2, 1 - b1, 1 - b2, 1e-8, 0.01,
+                    1.0 - b1 ** t, 1.0 - b2 ** t)])
+    return p, g, mm, v, mask, s
+
+
+@pytest.mark.parametrize("n,m,bm", [
+    (4, 4096, 2048),           # exact multiple: no padding
+    (4, 2 * 2048 + 931, 2048),  # M % block_m != 0 -> padding branch
+    (3, 97, 64),               # single padded tile
+    (6, 1037, 2048),           # odd width, one block covers all
+])
+def test_fused_adamw_parity_fp32(n, m, bm):
+    """Kernel == oracle bit-for-bit in fp32 — compared jit-to-jit, which
+    is how the round runs both paths (eager-vs-jit differs in the last
+    ulp because XLA contracts a*b+c into FMA; see kernels/fused_adam.py)."""
+    from repro.kernels.fused_adam import fused_adamw_2d
+    p, g, mm, v, mask, s = _adam_problem(n, m)
+    ker = jax.jit(lambda *a: fused_adamw_2d(*a, block_m=bm, interpret=True))
+    orc = jax.jit(ref.fused_adamw_2d)
+    for got, want in zip(ker(p, g, mm, v, mask, s),
+                         orc(p, g, mm, v, mask, s)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm", [64, 2048])
+def test_fused_adamw_bf16(bm):
+    """bf16 params: moments stay fp32 (bit-exact vs oracle); the p' cast
+    through the kernel's fp32 compute lands within one bf16 ulp."""
+    from repro.kernels.fused_adam import fused_adamw_2d
+    p, g, mm, v, mask, s = _adam_problem(5, 731, jnp.bfloat16)
+    ker = jax.jit(lambda *a: fused_adamw_2d(*a, block_m=bm, interpret=True))
+    orc = jax.jit(ref.fused_adamw_2d)
+    po, mo, vo = ker(p, g, mm, v, mask, s)
+    pw, mw, vw = orc(p, g, mm, v, mask, s)
+    assert po.dtype == jnp.bfloat16 and mo.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(po, np.float32),
+                               np.asarray(pw, np.float32), atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(mo), np.asarray(mw))
+    np.testing.assert_array_equal(np.asarray(vo), np.asarray(vw))
+
+
+def test_fused_adamw_mask_freezes_rows():
+    """mask=0 rows keep p AND both moments bit-identical (the paper's
+    non-participation contract), straight from the kernel."""
+    from repro.kernels.fused_adam import fused_adamw_2d
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0], jnp.float32)
+    p, g, mm, v, _, s = _adam_problem(4, 257, mask=mask)
+    po, mo, vo = jax.jit(
+        lambda *a: fused_adamw_2d(*a, interpret=True))(p, g, mm, v, mask, s)
+    for row in (1, 3):
+        np.testing.assert_array_equal(np.asarray(po[row]), np.asarray(p[row]))
+        np.testing.assert_array_equal(np.asarray(mo[row]), np.asarray(mm[row]))
+        np.testing.assert_array_equal(np.asarray(vo[row]), np.asarray(v[row]))
+    assert not np.array_equal(np.asarray(po[0]), np.asarray(p[0]))
+
+
+def test_fused_adamw_empty_leaf_and_mask_none():
+    """ops.fused_adamw: zero-size leaves short-circuit (grid math would
+    divide by zero), and mask=None (shared stage) flattens any-rank
+    leaves to one always-on row."""
+    from repro.kernels import ops
+    _, _, _, _, _, s = _adam_problem(1, 8)
+    p0 = jnp.zeros((4, 0, 5), jnp.float32)
+    po, mo, vo = ops.fused_adamw(p0, p0, p0, p0,
+                                 jnp.ones((4,), jnp.float32), s)
+    assert po.shape == (4, 0, 5) and mo.dtype == jnp.float32
+    p3 = _rand((3, 4, 5))
+    g3 = _rand((3, 4, 5), scale=1e-2)
+    m3 = jnp.zeros((3, 4, 5), jnp.float32)
+    v3 = jnp.zeros((3, 4, 5), jnp.float32)
+    po, mo, vo = jax.jit(lambda *a: ops.fused_adamw(*a, None, s))(
+        p3, g3, m3, v3)
+    assert po.shape == p3.shape
+    assert not np.array_equal(np.asarray(po), np.asarray(p3))
+
+
+def test_fused_adamw_dispatch_matches_treemap():
+    """adamw_update(use_kernel=True) == the unfused tree.map chain
+    bit-for-bit in fp32 over a mixed-rank pytree (jit-to-jit), for both
+    the masked stacked stage and the mask=None shared stage."""
+    from repro.optim.optimizers import adamw_init, adamw_update
+    params = {"w": _rand((4, 33, 7)), "b": _rand((4, 129)),
+              "s": _rand((4,))}
+    grads = jax.tree.map(lambda l: 1e-2 * l, params)
+    st = adamw_init(params)
+    for mask in (jnp.asarray([1.0, 0.0, 1.0, 1.0], jnp.float32), None):
+        f0 = jax.jit(lambda p, g, o, mk=mask: adamw_update(
+            p, g, o, lr=3e-3, mask=mk))
+        f1 = jax.jit(lambda p, g, o, mk=mask: adamw_update(
+            p, g, o, lr=3e-3, mask=mk, use_kernel=True))
+        p0, o0 = f0(params, grads, st)
+        p1, o1 = f1(params, grads, st)
+        for a, b in zip(jax.tree.leaves((p0, o0)), jax.tree.leaves((p1, o1))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_adamw_one_executable_across_hypers():
+    """lr / weight-decay / step reach the kernel as the (9,) scalar
+    vector — dynamic lr across calls must not retrace."""
+    from repro.optim.optimizers import adamw_init, adamw_update
+    params = {"w": _rand((2, 65))}
+    grads = {"w": _rand((2, 65), scale=1e-2)}
+    st = adamw_init(params)
+    f = jax.jit(lambda p, g, o, lr: adamw_update(
+        p, g, o, lr=lr, mask=jnp.ones((2,), jnp.float32),
+        use_kernel=True))
+    for lr in (1e-3, 3e-3, 1e-4):
+        _, st = f(params, grads, st, jnp.float32(lr))
+    assert f._cache_size() == 1

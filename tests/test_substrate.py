@@ -121,6 +121,32 @@ def test_masked_update_freezes_unselected_clients():
     np.testing.assert_array_equal(np.asarray(st2.m["w"][3]), 0.0)
 
 
+def test_masked_sgd_freezes_unselected_clients():
+    """SGD+momentum obeys the same moment-freeze contract as Adam: a
+    masked-out client's params AND momentum stay bit-identical across
+    rounds (the blend mk·new + (1−mk)·old at mk=0 keeps the frozen slot
+    exact — no division anywhere in the SGD step, so `new` is always
+    finite and 0·new contributes nothing)."""
+    params = {"w": jnp.ones((4, 3))}   # 4 clients
+    grads = {"w": jnp.full((4, 3), 2.5)}
+    state = sgd_init(params)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    # two masked rounds: the frozen momentum must not drift even as the
+    # selected rows accumulate velocity
+    p1, s1 = sgd_update(params, grads, state, lr=0.1, momentum=0.9,
+                        mask=mask)
+    p2, s2 = sgd_update(p1, grads, s1, lr=0.1, momentum=0.9, mask=mask)
+    assert not jnp.allclose(p2["w"][0], params["w"][0])
+    for row in (1, 3):
+        np.testing.assert_array_equal(np.asarray(p2["w"][row]),
+                                      np.asarray(params["w"][row]))
+        np.testing.assert_array_equal(np.asarray(s2.mom["w"][row]), 0.0)
+    # selected rows carry momentum: round-2 step larger than round-1
+    d1 = float(jnp.abs(p1["w"][0] - params["w"][0]).max())
+    d2 = float(jnp.abs(p2["w"][0] - p1["w"][0]).max())
+    assert d2 > d1
+
+
 def test_sgd_momentum():
     params = {"w": jnp.zeros((2,))}
     grads = {"w": jnp.ones((2,))}
